@@ -1,0 +1,40 @@
+"""Models C & D on an 8-device mesh (paper §3.3/§3.4), incl. the paper-faithful
+decimal MSD mode and the beyond-paper sample-splitter mode under skew.
+
+    python examples/distributed_sort_demo.py          # sets its own XLA_FLAGS
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import cluster_sort, distributed_merge_sort
+
+mesh = jax.make_mesh((8,), ("nodes",))
+rng = np.random.default_rng(0)
+x = rng.integers(100, 1000, size=80_000).astype(np.int32)
+xj = jnp.asarray(x)
+want = np.sort(x)
+
+# model C — distributed merge tree (MPI Fig 3 -> ppermute rounds)
+out = distributed_merge_sort(xj, mesh, "nodes")
+assert (np.asarray(out) == want).all()
+print("model C  distributed merge tree      OK   (root holds all data — the")
+print("         paper's own scaling flaw, kept as the faithful baseline)")
+
+# model D — one-step MSD-radix scatter + local sort (zero inter-node merging)
+slab, valid = cluster_sort(xj, mesh, "nodes", mode="decimal", digits=3)
+assert (np.asarray(slab)[np.asarray(valid)] == want).all()
+print("model D  decimal MSD (paper-exact)   OK   (result stays distributed)")
+
+# beyond paper: sample splitters keep buckets balanced under heavy skew
+skewed = (rng.zipf(1.5, size=80_000) % 900 + 100).astype(np.int32)
+slab, valid = cluster_sort(jnp.asarray(skewed), mesh, "nodes", mode="splitters")
+assert (np.asarray(slab)[np.asarray(valid)] == np.sort(skewed)).all()
+print("model D+ sample splitters (skewed)   OK")

@@ -1,0 +1,127 @@
+"""Architecture registry + assigned input shapes + smoke-test reduction.
+
+``ARCHS`` maps the assignment's arch ids to full ModelConfigs (exercised only
+via the dry-run: ShapeDtypeStruct, no allocation). ``reduced()`` produces the
+same-family tiny config the CPU smoke tests instantiate for real.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import replace
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import ModelConfig
+
+from .command_r_35b import CONFIG as _command_r
+from .dbrx_132b import CONFIG as _dbrx
+from .gemma3_12b import CONFIG as _gemma3
+from .granite_moe_3b_a800m import CONFIG as _granite
+from .internvl2_2b import CONFIG as _internvl2
+from .jamba_1_5_large_398b import CONFIG as _jamba
+from .mamba2_1_3b import CONFIG as _mamba2
+from .musicgen_medium import CONFIG as _musicgen
+from .qwen2_7b import CONFIG as _qwen2
+from .qwen3_0_6b import CONFIG as _qwen3
+
+ARCHS: Dict[str, ModelConfig] = {
+    c.name: c
+    for c in [
+        _dbrx,
+        _granite,
+        _internvl2,
+        _qwen3,
+        _command_r,
+        _qwen2,
+        _gemma3,
+        _musicgen,
+        _mamba2,
+        _jamba,
+    ]
+}
+
+# assignment shape table: name -> (seq_len, global_batch, kind)
+SHAPES = {
+    "train_4k": (4_096, 256, "train"),
+    "prefill_32k": (32_768, 32, "prefill"),
+    "decode_32k": (32_768, 128, "decode"),
+    "long_500k": (524_288, 1, "decode"),
+}
+
+# archs with a sub-quadratic serving path (SSM / hybrid / 5:1 local window)
+SUBQUADRATIC = {"mamba2-1.3b", "jamba-1.5-large-398b", "gemma3-12b"}
+
+
+def cell_applicable(arch: str, shape: str) -> bool:
+    """long_500k is skipped for pure full-attention archs (DESIGN.md §6)."""
+    if shape == "long_500k":
+        return arch in SUBQUADRATIC
+    return True
+
+
+def all_cells():
+    return [
+        (a, s) for a in ARCHS for s in SHAPES if cell_applicable(a, s)
+    ]
+
+
+def input_specs(cfg: ModelConfig, shape: str):
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    train   -> {tokens (B,S), labels (B,S) [, frontend_embeds (B,F,D)]}
+    prefill -> {tokens (B,S) [, frontend_embeds]}
+    decode  -> {tokens (B,1)} (cache is built separately via cache_specs)
+    """
+    S, B, kind = SHAPES[shape]
+    tok = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    specs = {}
+    if kind == "train":
+        specs = {"tokens": tok, "labels": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    elif kind == "prefill":
+        specs = {"tokens": tok}
+    else:  # decode: one new token against a cache of length S
+        specs = {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32)}
+    if cfg.frontend != "none" and kind != "decode":
+        specs["frontend_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_frontend_tokens, cfg.d_model), cfg.compute_dtype
+        )
+    return specs
+
+
+def cache_specs(cfg: ModelConfig, shape: str):
+    """ShapeDtypeStructs of the decode cache for this cell (no allocation)."""
+    from repro.models.transformer import init_cache
+
+    S, B, kind = SHAPES[shape]
+    assert kind == "decode"
+    return jax.eval_shape(lambda: init_cache(cfg, B, S))
+
+
+def reduced(cfg: ModelConfig) -> ModelConfig:
+    """Same-family tiny config for CPU smoke tests (one pattern group)."""
+    is_attn = any(k.startswith("attn") for k in cfg.pattern)
+    return replace(
+        cfg,
+        name=cfg.name + "-smoke",
+        n_layers=len(cfg.pattern),
+        d_model=64,
+        n_heads=4 if is_attn else 0,
+        n_kv_heads=min(cfg.n_kv_heads, 2) if is_attn else 0,
+        head_dim=16 if is_attn else 0,
+        d_ff=0 if cfg.d_ff == 0 else 96,
+        vocab_size=128,
+        n_experts=min(cfg.n_experts, 5) if cfg.n_experts else 0,
+        top_k=min(cfg.top_k, 2) if cfg.top_k else 0,
+        capacity_factor=4.0,  # tiny batches + fresh routers overflow cf=2
+
+        sliding_window=8 if cfg.sliding_window else 0,
+        ssm_state=16,
+        ssm_head_dim=16,
+        ssm_chunk=8,
+        n_frontend_tokens=4 if cfg.frontend != "none" else 0,
+        kv_chunk=16,
+        param_dtype=jnp.float32,
+        compute_dtype=jnp.float32,
+    )

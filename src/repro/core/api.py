@@ -1,0 +1,53 @@
+"""Public sort API — strategy dispatch over the paper's four models.
+
+``sort(x)``                      -> fastest single-device path (model B)
+``sort(x, mesh=..., axis=...)``  -> model D cluster sort (production path)
+``strategy=`` overrides: 'shared_merge' (A), 'shared_hybrid' (B),
+'distributed_merge' (C), 'cluster' (D).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .cluster_sort import cluster_sort
+from .distributed_sort import distributed_merge_sort
+from .shared_sort import shared_memory_sort
+
+__all__ = ["sort"]
+
+_STRATEGIES = ("shared_merge", "shared_hybrid", "distributed_merge", "cluster")
+
+
+def sort(
+    x: jax.Array,
+    *,
+    mesh=None,
+    axis: Optional[str] = None,
+    strategy: Optional[str] = None,
+    n_threads: int = 8,
+    ascending: bool = True,
+    **kwargs,
+):
+    """Sort the last axis of ``x`` using one of the paper's parallel models."""
+    if strategy is None:
+        strategy = "cluster" if mesh is not None else "shared_hybrid"
+    if strategy not in _STRATEGIES:
+        raise ValueError(f"strategy must be one of {_STRATEGIES}")
+    if strategy == "shared_merge":
+        return shared_memory_sort(
+            x, n_threads=n_threads, local_impl="merge", ascending=ascending
+        )
+    if strategy == "shared_hybrid":
+        return shared_memory_sort(
+            x, n_threads=n_threads, local_impl="xla", ascending=ascending
+        )
+    if mesh is None or axis is None:
+        raise ValueError(f"strategy {strategy!r} requires mesh= and axis=")
+    if strategy == "distributed_merge":
+        out = distributed_merge_sort(x, mesh, axis, **kwargs)
+        return out if ascending else jnp.flip(out, -1)
+    slab, valid = cluster_sort(x, mesh, axis, **kwargs)
+    return slab, valid

@@ -1,0 +1,206 @@
+"""Vectorized bitonic sorting network — the TPU-native local sort.
+
+The paper's per-worker "fast sequential sort" is recursive Quicksort. Quicksort's
+data-dependent recursion has no TPU analogue; the fixed-schedule equivalent of a
+fast local sort on a vector machine is the bitonic network: every stage is a
+branch-free compare-exchange expressible as ``where(min/max)`` over a reshaped
+axis. This file is the pure-jnp form; ``repro/kernels/bitonic_sort`` is the
+Pallas VMEM-tiled version of the same network and must match it element-for-
+element.
+
+All entry points operate on the last axis and accept arbitrary leading batch
+dims. Lengths are padded to the next power of two with sentinels.
+
+Stability: a bitonic network is unstable; the paper chose merge sort for its
+stability. We restore it with a lexicographic (key, original-rank) comparator —
+rank ties never exist, so the network output is the unique stable order.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "bitonic_sort",
+    "bitonic_merge_pair",
+    "bitonic_topk",
+    "next_pow2",
+    "sentinel_for",
+]
+
+
+def next_pow2(n: int) -> int:
+    return 1 << max(0, (n - 1).bit_length())
+
+
+def sentinel_for(dtype, *, largest: bool):
+    """Value that sorts after (largest) / before (smallest) all real keys."""
+    dtype = jnp.dtype(dtype)
+    if jnp.issubdtype(dtype, jnp.floating):
+        v = jnp.inf if largest else -jnp.inf
+    elif jnp.issubdtype(dtype, jnp.integer):
+        info = jnp.iinfo(dtype)
+        v = info.max if largest else info.min
+    else:
+        raise TypeError(f"unsupported key dtype {dtype}")
+    return jnp.asarray(v, dtype)
+
+
+def _split(x, j: int):
+    """(..., n) -> halves a, b of shape (..., n/(2j), j) paired at distance j."""
+    *lead, n = x.shape
+    x2 = x.reshape(*lead, n // (2 * j), 2, j)
+    return x2[..., 0, :], x2[..., 1, :]
+
+
+def _join(a, b):
+    *lead, g, j = a.shape
+    return jnp.stack([a, b], axis=-2).reshape(*lead, g * 2 * j)
+
+
+def _compare_exchange(keys, ranks, values, j: int, dir_up, *, ascending: bool):
+    """One bitonic substage at partner distance ``j`` (static), vectorized.
+
+    ``dir_up`` is a bool vector over the n/(2j) groups: True means this group
+    sorts in comparator order, False in reverse. ``ascending`` is folded into
+    the primary comparison; ``ranks`` (optional) break ties -> stable.
+    Reshape-based formulation, no gathers — TPU VPU friendly.
+    """
+    ka, kb = _split(keys, j)
+    gt = (ka > kb) if ascending else (ka < kb)  # "a after b" in final order
+    if ranks is not None:
+        ra, rb = _split(ranks, j)
+        gt = gt | ((ka == kb) & (ra > rb))
+    swap = gt == dir_up[:, None]
+    keys = _join(jnp.where(swap, kb, ka), jnp.where(swap, ka, kb))
+    if ranks is not None:
+        ranks = _join(jnp.where(swap, rb, ra), jnp.where(swap, ra, rb))
+    if values is not None:
+        def ex(v):
+            va, vb = _split(v, j)
+            return _join(jnp.where(swap, vb, va), jnp.where(swap, va, vb))
+        values = jax.tree.map(ex, values)
+    return keys, ranks, values
+
+
+def _network(keys, ranks, values, *, ascending: bool):
+    """Full bitonic sort network on a power-of-two last axis (static unroll)."""
+    n = keys.shape[-1]
+    if n == 1:
+        return keys, ranks, values
+    log_n = n.bit_length() - 1
+    for stage in range(1, log_n + 1):  # sorted block size 2**stage
+        k = 1 << stage
+        for sub in range(stage - 1, -1, -1):  # partner distance 2**sub
+            j = 1 << sub
+            g = n // (2 * j)
+            # group m covers elements [m*2j, (m+1)*2j); its bitonic block id is
+            # (m*2j)//k; blocks alternate comparator/reverse-comparator order.
+            blk = (jnp.arange(g) * 2 * j) // k
+            dir_up = blk % 2 == 0
+            keys, ranks, values = _compare_exchange(
+                keys, ranks, values, j, dir_up, ascending=ascending
+            )
+    return keys, ranks, values
+
+
+def _merge_network(keys, ranks, values, *, ascending: bool):
+    """Bitonic *merge* only: last axis must already be a bitonic sequence."""
+    n = keys.shape[-1]
+    log_n = n.bit_length() - 1
+    for sub in range(log_n - 1, -1, -1):
+        j = 1 << sub
+        g = n // (2 * j)
+        dir_up = jnp.ones((g,), bool)
+        keys, ranks, values = _compare_exchange(
+            keys, ranks, values, j, dir_up, ascending=ascending
+        )
+    return keys, ranks, values
+
+
+def _pad_last(x, pad: int, value):
+    pad_width = [(0, 0)] * (x.ndim - 1) + [(0, pad)]
+    return jnp.pad(x, pad_width, constant_values=value)
+
+
+@partial(jax.jit, static_argnames=("ascending", "stable", "has_values"))
+def _sort_impl(keys, values, *, ascending: bool, stable: bool, has_values: bool):
+    n = keys.shape[-1]
+    np2 = next_pow2(n)
+    pad = np2 - n
+    sent = sentinel_for(keys.dtype, largest=ascending)
+    if pad:
+        keys = _pad_last(keys, pad, sent)
+        if values is not None:
+            values = jax.tree.map(lambda v: _pad_last(v, pad, 0), values)
+    ranks = None
+    if stable:
+        ranks = jnp.broadcast_to(
+            jnp.arange(np2, dtype=jnp.int32), keys.shape
+        )
+    keys, _, values = _network(keys, ranks, values, ascending=ascending)
+    if pad:
+        keys = keys[..., :n]
+        if values is not None:
+            values = jax.tree.map(lambda v: v[..., :n], values)
+    return keys, values
+
+
+def bitonic_sort(
+    keys: jax.Array,
+    values=None,
+    *,
+    ascending: bool = True,
+    stable: bool = False,
+):
+    """Sort ``keys`` along the last axis with a bitonic network.
+
+    ``values`` (array or pytree of arrays, same shape as keys) are permuted
+    alongside. Returns sorted keys, or ``(sorted_keys, permuted_values)``.
+    """
+    k, v = _sort_impl(
+        keys, values, ascending=ascending, stable=stable, has_values=values is not None
+    )
+    return k if values is None else (k, v)
+
+
+@partial(jax.jit, static_argnames=("ascending", "has_values"))
+def _merge_impl(a, b, va, vb, *, ascending: bool, has_values: bool):
+    keys = jnp.concatenate([a, jnp.flip(b, axis=-1)], axis=-1)
+    values = None
+    if has_values:
+        values = jax.tree.map(
+            lambda x, y: jnp.concatenate([x, jnp.flip(y, axis=-1)], axis=-1), va, vb
+        )
+    keys, _, values = _merge_network(keys, None, values, ascending=ascending)
+    return keys, values
+
+
+def bitonic_merge_pair(a, b, va=None, vb=None, *, ascending: bool = True):
+    """Merge two sorted arrays (equal pow2 last-axis length) into one.
+
+    ``concat(a, reverse(b))`` is bitonic -> a single merge network. This is the
+    paper's "merge two sorted lists" step in branch-free form; O(n log n)
+    compare-exchanges instead of O(n) sequential merge, but fully vectorized.
+    """
+    if a.shape[-1] != b.shape[-1]:
+        raise ValueError(f"length mismatch {a.shape} vs {b.shape}")
+    n = a.shape[-1]
+    if n & (n - 1):
+        raise ValueError("bitonic_merge_pair requires power-of-two lengths")
+    keys, values = _merge_impl(
+        a, b, va, vb, ascending=ascending, has_values=va is not None
+    )
+    return keys if va is None else (keys, values)
+
+
+def bitonic_topk(x: jax.Array, k: int, *, largest: bool = True):
+    """Top-k (values, indices) via the bitonic network (serving-path utility)."""
+    idx = jnp.broadcast_to(jnp.arange(x.shape[-1], dtype=jnp.int32), x.shape)
+    keys, vals = _sort_impl(
+        x, idx, ascending=not largest, stable=True, has_values=True
+    )
+    return keys[..., :k], vals[..., :k]

@@ -1,0 +1,120 @@
+"""Synthetic data pipeline: deterministic, checkpointable, sort-integrated.
+
+* ``SyntheticLM`` — deterministic PRNG token stream (zipf-ish marginals so the
+  loss has structure to learn); state = (seed, step) -> restart is bit-exact
+  after checkpoint restore (fault-tolerance requirement).
+* ``length_bucketed_batches`` — documents-of-varying-length batching: sorts
+  the document pool by length with the paper's shared-memory hybrid sort
+  (model B) so each batch packs near-equal lengths and padding waste drops;
+  this is the dense-arch integration point of the paper (DESIGN.md §3).
+* host-side prefetch thread keeps the accelerator fed.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from dataclasses import dataclass
+from typing import Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.shared_sort import shared_memory_sort
+
+
+@dataclass
+class PipelineState:
+    seed: int
+    step: int
+
+
+class SyntheticLM:
+    """Deterministic synthetic LM batches: tokens ~ zipf-ish, labels = shift."""
+
+    def __init__(self, vocab: int, batch: int, seq: int, *, seed: int = 0):
+        self.vocab, self.batch, self.seq = vocab, batch, seq
+        self.state = PipelineState(seed=seed, step=0)
+
+    def checkpoint_state(self) -> dict:
+        return {"seed": self.state.seed, "step": self.state.step}
+
+    def restore_state(self, s: dict) -> None:
+        self.state = PipelineState(seed=int(s["seed"]), step=int(s["step"]))
+
+    def _batch_at(self, step: int) -> dict:
+        rng = np.random.default_rng((self.state.seed, step))
+        # zipf-ish marginal + a periodic structure the model can learn
+        z = rng.zipf(1.3, size=(self.batch, self.seq + 1))
+        toks = (z % (self.vocab - 1)).astype(np.int32) + 1
+        pattern = (np.arange(self.seq + 1) % 7 == 0)
+        toks[:, pattern] = 1 + (np.arange(self.batch, dtype=np.int32) % 7)[:, None]
+        return {
+            "tokens": toks[:, :-1],
+            "labels": toks[:, 1:].astype(np.int32),
+        }
+
+    def __iter__(self) -> Iterator[dict]:
+        while True:
+            b = self._batch_at(self.state.step)
+            self.state.step += 1
+            yield b
+
+
+class Prefetcher:
+    """Host-side background prefetch (keeps step time off the data path)."""
+
+    def __init__(self, it: Iterator[dict], depth: int = 2):
+        self.q: queue.Queue = queue.Queue(maxsize=depth)
+        self.it = it
+        self._stop = threading.Event()
+        self.t = threading.Thread(target=self._run, daemon=True)
+        self.t.start()
+
+    def _run(self):
+        for item in self.it:
+            if self._stop.is_set():
+                return
+            self.q.put(item)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        return self.q.get()
+
+    def close(self):
+        self._stop.set()
+        try:
+            self.q.get_nowait()
+        except queue.Empty:
+            pass
+
+
+def length_bucketed_batches(doc_lengths: np.ndarray, batch: int, *, n_threads: int = 8):
+    """Group document ids into batches of near-equal length.
+
+    Sorts (length, id) with the paper's model-B sort; adjacent ids then form
+    minimal-padding batches. Returns (batches (n_batches, batch) of doc ids,
+    padding_waste_fraction_before, after).
+    """
+    n = len(doc_lengths)
+    if n * (int(np.max(doc_lengths)) + 1) >= 2**31:
+        raise ValueError("length*id packing exceeds int32 (enable x64 or shard the pool)")
+    lengths = jnp.asarray(doc_lengths, jnp.int32)
+    # stable key-value sort: pack (length, id) — lengths fit comfortably
+    packed = lengths * n + jnp.arange(n, dtype=jnp.int32)
+    packed_sorted = shared_memory_sort(packed, n_threads=n_threads)
+    order = np.asarray(packed_sorted % n, np.int64)
+    sorted_len = np.asarray(packed_sorted // n, np.int64)
+
+    usable = (n // batch) * batch
+    batches = order[:usable].reshape(-1, batch)
+    blens = sorted_len[:usable].reshape(-1, batch)
+
+    def waste(arr):
+        mx = arr.max(axis=1, keepdims=True)
+        return float((mx - arr).sum() / np.maximum((mx * np.ones_like(arr)).sum(), 1))
+
+    unsorted = np.asarray(doc_lengths)[:usable].reshape(-1, batch)
+    return batches, waste(unsorted), waste(blens)

@@ -1,0 +1,116 @@
+"""Fault tolerance: watchdog, retry-from-checkpoint, anomaly monitors.
+
+What "runs on 1000+ nodes" means for the control plane (DESIGN.md §5):
+
+* ``StepWatchdog`` — per-step wall-clock deadline. A straggling/hung step
+  (dead host, stuck collective) raises ``StepTimeout`` instead of wedging the
+  job; the driver restores the last checkpoint and continues. On real pods
+  the deadline maps to the coordinator's barrier timeout.
+* ``run_with_recovery`` — the restart loop: run steps, checkpoint every K,
+  on StepTimeout / anomaly restore + replay (bit-exact: pipeline state is in
+  the checkpoint). ``max_restarts`` bounds flapping. Elastic rescale is the
+  same path with a different mesh at restore (checkpoints are mesh-agnostic).
+* ``AnomalyMonitor`` — NaN/inf loss, exploding grad-norm, and MoE capacity
+  overflow (routing collapse) counters; each trips recovery rather than
+  silently corrupting the run.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+import numpy as np
+
+
+class StepTimeout(RuntimeError):
+    pass
+
+
+class TrainingAnomaly(RuntimeError):
+    pass
+
+
+class StepWatchdog:
+    """Context manager enforcing a wall-clock deadline on one step."""
+
+    def __init__(self, seconds: float):
+        self.seconds = seconds
+        self._timer: Optional[threading.Timer] = None
+        self._expired = threading.Event()
+
+    def __enter__(self):
+        self._timer = threading.Timer(self.seconds, self._expired.set)
+        self._timer.start()
+        return self
+
+    def __exit__(self, *exc):
+        assert self._timer is not None
+        self._timer.cancel()
+        if self._expired.is_set() and exc[0] is None:
+            raise StepTimeout(f"step exceeded {self.seconds}s deadline")
+        return False
+
+    @property
+    def expired(self) -> bool:
+        return self._expired.is_set()
+
+
+@dataclass
+class AnomalyMonitor:
+    grad_norm_limit: float = 1e4
+    overflow_patience: int = 10      # consecutive MoE-overflow steps tolerated
+    _overflow_streak: int = 0
+
+    def check(self, metrics: dict) -> None:
+        loss = float(metrics.get("loss", 0.0))
+        if not np.isfinite(loss):
+            raise TrainingAnomaly(f"non-finite loss {loss}")
+        gn = float(metrics.get("grad_norm", 0.0))
+        if gn > self.grad_norm_limit:
+            raise TrainingAnomaly(f"grad norm {gn:.3e} above limit")
+        if bool(metrics.get("moe_overflow", False)):
+            self._overflow_streak += 1
+            if self._overflow_streak >= self.overflow_patience:
+                raise TrainingAnomaly(
+                    f"MoE capacity overflow for {self._overflow_streak} consecutive "
+                    "steps (routing collapse) — raise capacity_factor or restore"
+                )
+        else:
+            self._overflow_streak = 0
+
+
+def run_with_recovery(
+    *,
+    n_steps: int,
+    step_fn: Callable[[int], dict],            # runs step i, returns metrics
+    save_fn: Callable[[int], None],            # checkpoint at step i
+    restore_fn: Callable[[], int],             # restore; returns resume step
+    checkpoint_every: int = 50,
+    step_deadline_s: float = 3600.0,
+    max_restarts: int = 3,
+    monitor: Optional[AnomalyMonitor] = None,
+) -> dict:
+    """The production training control loop, minus the cluster scheduler.
+
+    Returns summary {steps_run, restarts, last_metrics}.
+    """
+    monitor = monitor or AnomalyMonitor()
+    restarts = 0
+    step = 0
+    last_metrics: dict = {}
+    while step < n_steps:
+        try:
+            with StepWatchdog(step_deadline_s):
+                last_metrics = step_fn(step)
+            monitor.check(last_metrics)
+            step += 1
+            if step % checkpoint_every == 0 or step == n_steps:
+                save_fn(step)
+        except (StepTimeout, TrainingAnomaly):
+            restarts += 1
+            if restarts > max_restarts:
+                raise
+            step = restore_fn()
+    return {"steps_run": step, "restarts": restarts, "last_metrics": last_metrics}

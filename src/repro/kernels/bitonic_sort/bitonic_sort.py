@@ -1,0 +1,125 @@
+"""Pallas TPU kernels for the bitonic sort network (VMEM-tiled).
+
+Decomposition (see ref.py): the canonical n-element network is split so that
+every O(log^2 block_n) "local" substage runs inside VMEM, and only the
+O(log^2 (n/block_n)) cross-block substages touch HBM between kernel launches.
+For block_n = 8192 fp32 that is a 32 KiB working set per program — well inside
+the ~16 MiB VMEM budget even with double buffering, and every compare-exchange
+is a branch-free ``min``/``max`` on VREG lanes (VPU work; the MXU is idle by
+design — sorting is a bandwidth problem).
+
+Kernels:
+  A  _block_sort_kernel   per-block full network, direction alternating by
+                          block parity (grid = n/block_n programs)
+  B  _block_merge_kernel  all substages j < block_n of one merge stage k in a
+                          single VMEM pass (the perf-critical fusion: log2(bn)
+                          HBM round-trips collapse into one)
+  C  cross-block substages j >= block_n: one elementwise compare-exchange over
+     block pairs, expressed at the jnp level (pure bandwidth, no reuse to
+     exploit — XLA emits the optimal elementwise kernel for it).
+
+TPU layout note: blocks are processed as (block_n,) vectors; the power-of-two
+reshapes inside the network lower to lane shuffles/rolls on Mosaic. Keep
+block_n a multiple of 1024 so every sub-reshape stays lane-aligned. Validated
+element-exact against ref.py in interpret mode (CPU) — the TPU is the target.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ce_flat(x, j: int, dir_up_vec):
+    """Compare-exchange at distance j on a flat (n,) array (in-kernel body)."""
+    n = x.shape[-1]
+    g = n // (2 * j)
+    x2 = x.reshape(g, 2, j)
+    a, b = x2[:, 0, :], x2[:, 1, :]
+    swap = (a > b) == dir_up_vec[:, None]
+    lo = jnp.where(swap, b, a)
+    hi = jnp.where(swap, a, b)
+    return jnp.stack([lo, hi], axis=1).reshape(n)
+
+
+def _block_sort_kernel(x_ref, o_ref, *, block_n: int):
+    """Kernel A body: canonical network on one block; direction = block parity."""
+    b = pl.program_id(0)
+    asc = (b % 2) == 0  # traced bool; fold into comparator via XOR
+    x = x_ref[...]
+    log_n = block_n.bit_length() - 1
+    for stage in range(1, log_n + 1):
+        k = 1 << stage
+        for sub in range(stage - 1, -1, -1):
+            j = 1 << sub
+            g = block_n // (2 * j)
+            blk = (jnp.arange(g) * 2 * j) // k
+            dir_up = (blk % 2 == 0) == asc
+            x = _ce_flat(x, j, dir_up)
+    o_ref[...] = x
+
+
+def _block_merge_kernel(x_ref, o_ref, *, block_n: int, k: int):
+    """Kernel B body: substages j = block_n/2 .. 1 of stage k, fused in VMEM.
+
+    Stage k > block_n implies the comparator direction is uniform inside the
+    block: up iff (block_start & k) == 0.
+    """
+    b = pl.program_id(0)
+    up = ((b * block_n) & k) == 0
+    x = x_ref[...]
+    sub = block_n // 2
+    while sub >= 1:
+        j = sub
+        g = block_n // (2 * j)
+        dir_up = jnp.full((g,), True) == up
+        x = _ce_flat(x, j, dir_up)
+        sub //= 2
+    o_ref[...] = x
+
+
+def block_sort(x: jax.Array, block_n: int, *, interpret: bool) -> jax.Array:
+    """Launch kernel A over all aligned blocks of the last axis (1-D x)."""
+    n = x.shape[-1]
+    nb = n // block_n
+    return pl.pallas_call(
+        functools.partial(_block_sort_kernel, block_n=block_n),
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((block_n,), lambda b: (b,))],
+        out_specs=pl.BlockSpec((block_n,), lambda b: (b,)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=interpret,
+    )(x)
+
+
+def block_merge(x: jax.Array, block_n: int, k: int, *, interpret: bool) -> jax.Array:
+    """Launch kernel B (fused local substages of stage k) over all blocks."""
+    n = x.shape[-1]
+    nb = n // block_n
+    return pl.pallas_call(
+        functools.partial(_block_merge_kernel, block_n=block_n, k=k),
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((block_n,), lambda b: (b,))],
+        out_specs=pl.BlockSpec((block_n,), lambda b: (b,)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=interpret,
+    )(x)
+
+
+def global_stage(x: jax.Array, j: int, k: int) -> jax.Array:
+    """Cross-block substage (j >= block_n): elementwise compare-exchange.
+
+    Pure-bandwidth step with zero data reuse; left at the jnp level where XLA
+    already emits a single fused elementwise kernel (Design choice C above).
+    """
+    n = x.shape[-1]
+    g = n // (2 * j)
+    dir_up = ((jnp.arange(g) * 2 * j) // k) % 2 == 0
+    x2 = x.reshape(g, 2, j)
+    a, b = x2[:, 0, :], x2[:, 1, :]
+    swap = (a > b) == dir_up[:, None]
+    lo = jnp.where(swap, b, a)
+    hi = jnp.where(swap, a, b)
+    return jnp.stack([lo, hi], axis=1).reshape(n)

@@ -1,0 +1,54 @@
+"""Jitted composition of the Pallas bitonic kernels: full-array sort.
+
+``pallas_sort(x)`` sorts the last axis of a 1-D array whose length is a
+power-of-two multiple of ``block_n``:
+
+  phase 1:  kernel A  (per-block alternating-direction sort)
+  stages k = 2*block_n .. n:
+     j = k/2 .. block_n   : cross-block elementwise compare-exchange (jnp)
+     j = block_n/2 .. 1   : kernel B (one fused VMEM pass)
+
+On CPU (this container) the kernels run in interpret mode; on TPU they compile
+through Mosaic. ``interpret=None`` auto-detects.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .bitonic_sort import block_merge, block_sort, global_stage
+
+
+def _auto_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def _pallas_sort_impl(x, *, block_n: int, interpret: bool):
+    n = x.shape[-1]
+    x = block_sort(x, block_n, interpret=interpret)
+    k = 2 * block_n
+    while k <= n:
+        j = k // 2
+        while j >= block_n:
+            x = global_stage(x, j, k)
+            j //= 2
+        x = block_merge(x, block_n, k, interpret=interpret)
+        k *= 2
+    return x
+
+
+def pallas_sort(x: jax.Array, *, block_n: int = 1024, interpret=None) -> jax.Array:
+    """Sort 1-D ``x`` (length = pow2 multiple of block_n) ascending."""
+    if x.ndim != 1:
+        raise ValueError("pallas_sort expects a 1-D array")
+    n = x.shape[-1]
+    if n % block_n or n & (n - 1):
+        raise ValueError(f"n={n} must be a power-of-two multiple of block_n={block_n}")
+    if n == block_n or n < block_n:
+        block_n = min(block_n, n)
+    if interpret is None:
+        interpret = _auto_interpret()
+    return _pallas_sort_impl(x, block_n=block_n, interpret=interpret)

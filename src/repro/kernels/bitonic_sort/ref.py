@@ -1,0 +1,60 @@
+"""Pure-jnp oracles for the Pallas bitonic sort kernels.
+
+The kernels decompose the canonical n-element bitonic network into:
+
+  phase 1   per-block sort, block b ascending iff b even          (kernel A)
+  stage k   global substages j = k/2 .. block_n  (elementwise)    (jnp / kernel C)
+            local substages  j = block_n/2 .. 1  (in-VMEM)        (kernel B)
+
+Each oracle below is the bit-exact jnp reference of one kernel, plus
+``full_sort_ref`` (= jnp.sort) for the end-to-end op.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bitonic import _compare_exchange, _network  # shared network code
+
+
+def block_sort_ref(x: jax.Array, block_n: int) -> jax.Array:
+    """Kernel A oracle: sort aligned blocks, alternating asc/desc per block."""
+    n = x.shape[-1]
+    nb = n // block_n
+    blocks = x.reshape(*x.shape[:-1], nb, block_n)
+    asc, _, _ = _network(blocks, None, None, ascending=True)
+    desc, _, _ = _network(blocks, None, None, ascending=False)
+    even = (jnp.arange(nb) % 2 == 0)[:, None]
+    return jnp.where(even, asc, desc).reshape(x.shape)
+
+
+def block_merge_ref(x: jax.Array, block_n: int, k: int) -> jax.Array:
+    """Kernel B oracle: all substages j = block_n/2 .. 1 of stage ``k``.
+
+    Assumes substages j >= block_n of stage k have already been applied, so the
+    comparator direction is uniform within each block: up iff (b*block_n & k)==0.
+    """
+    n = x.shape[-1]
+    sub = block_n // 2
+    while sub >= 1:
+        j = sub
+        g = n // (2 * j)
+        blk_of_group = (jnp.arange(g) * 2 * j) // k
+        dir_up = blk_of_group % 2 == 0
+        x, _, _ = _compare_exchange(x, None, None, j, dir_up, ascending=True)
+        sub //= 2
+    return x
+
+
+def global_stage_ref(x: jax.Array, j: int, k: int) -> jax.Array:
+    """Kernel C oracle: one cross-block substage (partner distance j >= block_n)."""
+    n = x.shape[-1]
+    g = n // (2 * j)
+    dir_up = ((jnp.arange(g) * 2 * j) // k) % 2 == 0
+    x, _, _ = _compare_exchange(x, None, None, j, dir_up, ascending=True)
+    return x
+
+
+def full_sort_ref(x: jax.Array) -> jax.Array:
+    """End-to-end oracle for the composed op."""
+    return jnp.sort(x, axis=-1)

@@ -1,0 +1,28 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state. Single pod: (data=16, model=16) = 256 chips
+(TPU v5e pod). Multi-pod: (pod=2, data=16, model=16) = 512 chips; the "pod"
+axis carries only DP gradient all-reduce (DCN-friendly).
+"""
+from __future__ import annotations
+
+import jax
+
+SINGLE_POD = (16, 16)
+MULTI_POD = (2, 16, 16)
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = MULTI_POD if multi_pod else SINGLE_POD
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(shape=(1, 1), axes=("data", "model")):
+    """Tiny mesh over however many (host) devices exist — tests/examples."""
+    n = 1
+    for s in shape:
+        n *= s
+    assert n <= len(jax.devices()), (shape, len(jax.devices()))
+    return jax.make_mesh(shape, axes)

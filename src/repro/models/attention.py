@@ -1,0 +1,247 @@
+"""GQA attention: training (chunked flash-style), prefill, and decode paths.
+
+Variants required by the assigned archs: grouped KV (all), qk-norm (qwen3,
+gemma3), QKV bias (qwen2), sliding-window local attention (gemma3 5:1 cadence),
+per-kind RoPE theta. Long sequences never materialize the (S, S) score matrix:
+training/prefill attention scans over KV chunks with an online-softmax
+accumulator (FlashAttention recurrence, expressed in jnp — the TPU kernel
+equivalent is fused by XLA; DESIGN.md notes this as a future Pallas hot-spot).
+Local (sliding-window) layers use blocked local attention: each query block
+attends to its own and the previous key block only — O(S·2w) not O(S²).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .layers import Params, apply_rope, linear, linear_init, rmsnorm, rmsnorm_init, rope_angles
+
+
+class AttnConfig(NamedTuple):
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    rope_theta: float = 10_000.0
+    sliding_window: int = 0        # 0 = full/global attention
+    kv_chunk: int = 1024           # flash scan chunk (global layers)
+
+
+def attn_init(key, cfg: AttnConfig, dtype) -> Params:
+    ks = jax.random.split(key, 4)
+    H, Hk, hd, D = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, cfg.d_model
+    p = {
+        "wq": linear_init(ks[0], D, H * hd, dtype, bias=cfg.qkv_bias),
+        "wk": linear_init(ks[1], D, Hk * hd, dtype, bias=cfg.qkv_bias),
+        "wv": linear_init(ks[2], D, Hk * hd, dtype, bias=cfg.qkv_bias),
+        "wo": linear_init(ks[3], H * hd, D, dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_init(hd, dtype)
+        p["k_norm"] = rmsnorm_init(hd, dtype)
+    return p
+
+
+def _project_qkv(p: Params, cfg: AttnConfig, x: jax.Array, positions: jax.Array):
+    B, S, _ = x.shape
+    H, Hk, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = linear(p["wq"], x).reshape(B, S, H, hd)
+    k = linear(p["wk"], x).reshape(B, S, Hk, hd)
+    v = linear(p["wv"], x).reshape(B, S, Hk, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q)
+        k = rmsnorm(p["k_norm"], k)
+    cos, sin = rope_angles(positions, hd, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    return q, k, v
+
+
+def _flash_causal(q, k, v, cfg: AttnConfig, constrain=None):
+    """Chunked causal attention with online softmax. q (B,S,H,hd); k,v (B,S,Hk,hd).
+
+    Fused-head formulation: KV heads are repeated to the full H inside the
+    chunk loop so every einsum parallelizes over the (possibly unevenly
+    sharded) head axis. The grouped (Hk, G) form makes SPMD shard the hd
+    *contraction* dim when Hk < TP and all-reduce the whole score tensor —
+    1.5 TiB/step on qwen2 prefill_32k (confirmed hypothesis H-gqa,
+    EXPERIMENTS §Perf iteration 2).
+    """
+    B, S, H, hd = q.shape
+    Hk = k.shape[2]
+    G = H // Hk
+    C = min(cfg.kv_chunk, S)
+    while S % C:  # largest divisor of S not exceeding kv_chunk
+        C -= 1
+    n_chunks = S // C
+    scale = hd ** -0.5
+
+    fused = constrain is not None  # pathological H % TP != 0 case
+    if fused:
+        qh = q * scale                          # (B, S, H, hd)
+    else:
+        qh = (q * scale).reshape(B, S, Hk, G, hd)
+    kc = k.reshape(B, n_chunks, C, Hk, hd)
+    vc = v.reshape(B, n_chunks, C, Hk, hd)
+    q_pos = jnp.arange(S)
+
+    def body(carry, inputs):
+        m, l, acc = carry
+        ci, k_blk, v_blk = inputs
+        k_pos = ci * C + jnp.arange(C)
+        mask = q_pos[:, None] >= k_pos[None, :]  # causal
+        if cfg.sliding_window:
+            mask &= q_pos[:, None] - k_pos[None, :] < cfg.sliding_window
+        if fused:
+            k_rep = jnp.repeat(k_blk, G, axis=2)  # (B, C, H, hd) — local copy
+            v_rep = jnp.repeat(v_blk, G, axis=2)
+            k_rep = constrain(k_rep, "batch", None, "model", None, allow_uneven=True)
+            v_rep = constrain(v_rep, "batch", None, "model", None, allow_uneven=True)
+            # scores: (B, S, H, C) fp32, head-sharded (uneven tiling)
+            s = jnp.einsum("bshd,bchd->bshc", qh, k_rep,
+                           preferred_element_type=jnp.float32)
+            mb = mask[None, :, None, :]
+        else:
+            # grouped scores: (B, S, Hk, G, C) — XLA shards Hk x G cleanly
+            s = jnp.einsum("bsxgd,bcxd->bsxgc", qh, k_blk,
+                           preferred_element_type=jnp.float32)
+            mb = mask[None, :, None, None, :]
+        s = jnp.where(mb, s, -jnp.inf)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        # guard fully-masked rows (m_new == -inf) -> exp(0)=1 but l stays 0
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(mb, p, 0.0)
+        alpha = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+        l = l * alpha + p.sum(axis=-1)
+        if fused:
+            pv = jnp.einsum("bshc,bchd->bshd", p.astype(v_blk.dtype), v_rep,
+                            preferred_element_type=jnp.float32)
+        else:
+            pv = jnp.einsum("bsxgc,bcxd->bsxgd", p.astype(v_blk.dtype), v_blk,
+                            preferred_element_type=jnp.float32)
+        acc = acc * alpha[..., None] + pv
+        return (m_new, l, acc), None
+
+    # derive carries from qh so SPMD batch sharding propagates into the scan
+    # (zeros/full constants are shardless -> the carry would unify to
+    # replicated and all-gather the batch each chunk; see EXPERIMENTS H-shard)
+    a0 = (qh * 0).astype(jnp.float32)
+    m0 = a0[..., 0] - jnp.inf
+    l0 = a0[..., 0]
+    (m, l, acc), _ = jax.lax.scan(
+        body,
+        (m0, l0, a0),
+        (jnp.arange(n_chunks), jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0)),
+    )
+    out = acc / jnp.maximum(l, 1e-20)[..., None]
+    return out.reshape(B, S, H, hd).astype(q.dtype)
+
+
+def _blocked_local(q, k, v, cfg: AttnConfig):
+    """Sliding-window attention via (current, previous) key blocks — O(S·2w)."""
+    B, S, H, hd = q.shape
+    Hk = k.shape[2]
+    G = H // Hk
+    w = cfg.sliding_window
+    S0 = S
+    if S % w:  # pad to a block multiple; causal mask keeps pads invisible
+        pad = w - S % w
+        q, k, v = (jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0))) for t in (q, k, v))
+        S = S + pad
+    nb = S // w
+    scale = hd ** -0.5
+
+    # fused-head form: repeat KV so the (possibly uneven) head dim carries TP
+    qb = (q * scale).reshape(B, nb, w, H, hd)
+    kb = jnp.repeat(k, G, axis=2).reshape(B, nb, w, H, hd)
+    vb = jnp.repeat(v, G, axis=2).reshape(B, nb, w, H, hd)
+    # previous block (block 0's "previous" is zeros, fully masked)
+    k_prev = jnp.concatenate([jnp.zeros_like(kb[:, :1]), kb[:, :-1]], axis=1)
+    v_prev = jnp.concatenate([jnp.zeros_like(vb[:, :1]), vb[:, :-1]], axis=1)
+    k2 = jnp.concatenate([k_prev, kb], axis=2)  # (B, nb, 2w, H, hd)
+    v2 = jnp.concatenate([v_prev, vb], axis=2)
+
+    s = jnp.einsum("bnqhd,bnkhd->bnhqk", qb, k2, preferred_element_type=jnp.float32)
+    q_pos = jnp.arange(w)[:, None]
+    k_pos = jnp.arange(2 * w)[None, :] - w  # relative to block start
+    rel = q_pos - k_pos
+    mask = (rel >= 0) & (rel < w)
+    blk0_mask = k_pos >= 0  # block 0 has no previous block
+    full_mask = jnp.where(
+        (jnp.arange(nb) == 0)[:, None, None], mask & blk0_mask, mask
+    )  # (nb, w, 2w)
+    s = jnp.where(full_mask[None, :, None, :, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bnhqk,bnkhd->bnqhd", p.astype(v2.dtype), v2)
+    return out.reshape(B, S, H, hd)[:, :S0].astype(q.dtype)
+
+
+def _pin_heads(q, k, v, constrain):
+    """Anchor (B,S,H,hd) activations: batch on dim0, heads on the model axis
+    (uneven tiling allowed). Without this SPMD may shard the hd *contraction*
+    dim instead and all-reduce whole score tensors (H-gqa, EXPERIMENTS §Perf)."""
+    if constrain is None:
+        return q, k, v
+    q = constrain(q, "batch", None, "model", None, allow_uneven=True)
+    k = constrain(k, "batch", None, "model", None, allow_uneven=True)
+    v = constrain(v, "batch", None, "model", None, allow_uneven=True)
+    return q, k, v
+
+
+def attention_train(p: Params, cfg: AttnConfig, x: jax.Array, constrain=None) -> jax.Array:
+    """Causal self-attention over the full sequence (training / prefill)."""
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    q, k, v = _pin_heads(q, k, v, constrain)
+    if cfg.sliding_window and S > cfg.sliding_window:
+        out = _blocked_local(q, k, v, cfg)
+    else:
+        out = _flash_causal(q, k, v, cfg, constrain=constrain)
+    return linear(p["wo"], out.reshape(B, S, -1))
+
+
+class KVCache(NamedTuple):
+    k: jax.Array          # (B, S_max, Hk, hd) — ring buffer for local layers
+    v: jax.Array
+    length: jax.Array     # scalar int32: tokens written so far
+
+
+def init_kv_cache(cfg: AttnConfig, batch: int, max_len: int, dtype) -> KVCache:
+    size = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+    shape = (batch, size, cfg.n_kv_heads, cfg.head_dim)
+    return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype), jnp.zeros((), jnp.int32))
+
+
+def attention_decode(p: Params, cfg: AttnConfig, x: jax.Array, cache: KVCache):
+    """One-token decode step. x (B, 1, D). Returns (out, new_cache)."""
+    B, _, _ = x.shape
+    pos = cache.length
+    positions = jnp.broadcast_to(pos, (B, 1))
+    q, k_new, v_new = _project_qkv(p, cfg, x, positions)
+    size = cache.k.shape[1]
+    slot = (pos % size) if cfg.sliding_window else pos
+    k = jax.lax.dynamic_update_slice(cache.k, k_new.astype(cache.k.dtype), (0, slot, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache.v, v_new.astype(cache.v.dtype), (0, slot, 0, 0))
+
+    H, Hk, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    G = H // Hk
+    qh = (q * hd ** -0.5).reshape(B, 1, Hk, G, hd)
+    s = jnp.einsum("bsxgd,btxd->bxgst", qh, k, preferred_element_type=jnp.float32)
+    t = jnp.arange(size)
+    if cfg.sliding_window:
+        age = (slot - t) % size  # age of each ring slot
+        valid = (age < jnp.minimum(pos + 1, size))
+    else:
+        valid = t <= pos
+    s = jnp.where(valid[None, None, None, None, :], s, -jnp.inf)
+    prob = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bxgst,btxd->bsxgd", prob.astype(v.dtype), v)
+    out = linear(p["wo"], out.reshape(B, 1, H * hd))
+    return out, KVCache(k, v, pos + 1)

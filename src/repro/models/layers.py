@@ -1,0 +1,102 @@
+"""Common model layers (pure-functional JAX, param pytrees are plain dicts)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+Params = dict
+
+
+# ---------------------------------------------------------------- RMSNorm ---
+def rmsnorm_init(dim: int, dtype) -> Params:
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+def rmsnorm(p: Params, x: jax.Array, *, eps: float = 1e-6) -> jax.Array:
+    """Variance reduction in f32; the normalize/scale multiplies stay in the
+    residual dtype. Upcasting the whole activation turns every TP-boundary
+    collective (fwd partials + bwd cotangents) f32 — 2x the wire bytes
+    (confirmed hypothesis H-bf16-ar, EXPERIMENTS §Perf iteration 1)."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return x * inv * p["scale"].astype(x.dtype)
+
+
+# ------------------------------------------------------------------- RoPE ---
+def rope_angles(positions: jax.Array, head_dim: int, theta: float) -> tuple:
+    """positions (...,) -> cos/sin tables (..., head_dim/2)."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x (..., S, H, hd); cos/sin (..., S, hd/2) broadcast over heads."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :]  # add head axis
+    s = sin[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1).astype(x.dtype)
+
+
+# ----------------------------------------------------------------- Linear ---
+def linear_init(key, d_in: int, d_out: int, dtype, *, bias: bool = False) -> Params:
+    scale = d_in ** -0.5
+    p = {"w": (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def linear(p: Params, x: jax.Array) -> jax.Array:
+    out = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        out = out + p["b"].astype(x.dtype)
+    return out
+
+
+# -------------------------------------------------------------------- MLP ---
+def mlp_init(key, d_model: int, d_ff: int, dtype, *, gated: bool = True) -> Params:
+    ks = jax.random.split(key, 3)
+    p = {
+        "w_in": linear_init(ks[0], d_model, d_ff, dtype),
+        "w_out": linear_init(ks[1], d_ff, d_model, dtype),
+    }
+    if gated:
+        p["w_gate"] = linear_init(ks[2], d_model, d_ff, dtype)
+    return p
+
+
+def mlp(p: Params, x: jax.Array) -> jax.Array:
+    h = linear(p["w_in"], x)
+    if "w_gate" in p:
+        h = jax.nn.silu(linear(p["w_gate"], x)) * h  # SwiGLU
+    else:
+        h = jax.nn.gelu(h)
+    return linear(p["w_out"], h)
+
+
+# -------------------------------------------------------------- Embedding ---
+def embed_init(key, vocab: int, d_model: int, dtype) -> Params:
+    return {"table": (jax.random.normal(key, (vocab, d_model), jnp.float32)).astype(dtype)}
+
+
+def embed(p: Params, tokens: jax.Array, compute_dtype) -> jax.Array:
+    return p["table"].astype(compute_dtype)[tokens]
+
+
+def unembed(p: Params, x: jax.Array, vocab_size: Optional[int] = None) -> jax.Array:
+    """Tied logits head: x (..., D) @ table.T -> (..., V_pad) in fp32.
+
+    Rows past ``vocab_size`` are EP-padding (vocab-parallel table) and get
+    -inf logits so sampling/CE never selects them.
+    """
+    logits = x.astype(jnp.float32) @ p["table"].astype(jnp.float32).T
+    v_pad = p["table"].shape[0]
+    if vocab_size is not None and v_pad != vocab_size:
+        logits = jnp.where(jnp.arange(v_pad) < vocab_size, logits, -jnp.inf)
+    return logits

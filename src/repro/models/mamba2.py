@@ -1,0 +1,203 @@
+"""Mamba-2 (SSD, arXiv:2405.21060) layer: chunked train scan + O(1) decode.
+
+The SSD chunked algorithm is TPU-native by construction: within a chunk the
+recurrence is a (Q×Q) masked matmul (MXU work), across chunks a short
+``lax.scan`` carries the (nh, ds, hp) state. All state math runs in fp32.
+
+  h_t = exp(a_t) * h_{t-1} + B_t (dt_t x_t),   a_t = -exp(A_log) * dt_t
+  y_t = C_t · h_t + D_skip * x_t
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import Params, linear, linear_init, rmsnorm, rmsnorm_init
+
+
+class MambaConfig(NamedTuple):
+    d_model: int
+    d_state: int = 128
+    head_dim: int = 64
+    expand: int = 2
+    n_groups: int = 1
+    conv_kernel: int = 4
+    chunk: int = 256
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+    @property
+    def conv_dim(self) -> int:
+        return self.d_inner + 2 * self.n_groups * self.d_state
+
+
+def mamba_init(key, cfg: MambaConfig, dtype) -> Params:
+    ks = jax.random.split(key, 5)
+    di, nh = cfg.d_inner, cfg.n_heads
+    proj_out = 2 * di + 2 * cfg.n_groups * cfg.d_state + nh
+    return {
+        "in_proj": linear_init(ks[0], cfg.d_model, proj_out, dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.conv_kernel, cfg.conv_dim)) * 0.2).astype(dtype),
+        "conv_b": jnp.zeros((cfg.conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "D_skip": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((nh,), 0.01))).astype(jnp.float32),
+        "norm": rmsnorm_init(di, dtype),
+        "out_proj": linear_init(ks[2], di, cfg.d_model, dtype),
+    }
+
+
+def _split_proj(cfg: MambaConfig, zxbcdt: jax.Array):
+    di, gs, nh = cfg.d_inner, cfg.n_groups * cfg.d_state, cfg.n_heads
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di : 2 * di + 2 * gs]
+    dt = zxbcdt[..., 2 * di + 2 * gs :]
+    return z, xbc, dt
+
+
+def _causal_conv(p: Params, cfg: MambaConfig, xbc: jax.Array) -> jax.Array:
+    """Depthwise causal conv over the sequence (train/prefill path)."""
+    k = cfg.conv_kernel
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    w = p["conv_w"].astype(xbc.dtype)
+    out = sum(pad[:, i : i + xbc.shape[1], :] * w[i] for i in range(k))
+    return jax.nn.silu(out + p["conv_b"].astype(xbc.dtype))
+
+
+def _ssd_chunked(cfg: MambaConfig, x, dt, B_, C_, A, h0=None, constrain=None):
+    """x (B,S,nh,hp); dt (B,S,nh); B_,C_ (B,S,ng,ds); A (nh,) negative.
+
+    Returns (y (B,S,nh,hp), h_final (B,nh,ds,hp)). fp32 math.
+    """
+    pin = constrain or (lambda t, *a: t)
+    Bb, S, nh, hp = x.shape
+    ng, ds = B_.shape[2], B_.shape[3]
+    Q = min(cfg.chunk, S)
+    while S % Q:  # largest divisor of S not exceeding the chunk size
+        Q -= 1
+    nc = S // Q
+    rep = nh // ng
+
+    xf = (x * dt[..., None]).astype(jnp.float32)            # dt-scaled input
+    a = (dt.astype(jnp.float32) * A)                        # (B,S,nh), <= 0
+    Bg = jnp.repeat(B_.astype(jnp.float32), rep, axis=2)    # (B,S,nh,ds)
+    Cg = jnp.repeat(C_.astype(jnp.float32), rep, axis=2)
+
+    def chunked(t):
+        return t.reshape((Bb, nc, Q) + t.shape[2:])
+
+    xc, ac, Bc, Cc = map(chunked, (xf, a, Bg, Cg))
+    cum = jnp.cumsum(ac, axis=2)                            # (B,nc,Q,nh)
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]     # (B,nc,Q,Q,nh) i,j
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+    L = jnp.where(causal[None, None, :, :, None], jnp.exp(seg), 0.0)
+
+    # intra-chunk: y[i] = sum_j (C_i·B_j) L[i,j] x[j]
+    cb = jnp.einsum("bnihd,bnjhd->bnijh", Cc, Bc)           # (B,nc,Q,Q,nh)
+    y_intra = jnp.einsum("bnijh,bnijh,bnjhp->bnihp", cb, L, xc)
+
+    # chunk states: S_n = sum_j exp(cum_last - cum_j) B_j ⊗ x_j
+    decay_end = jnp.exp(cum[:, :, -1:, :] - cum)            # (B,nc,Q,nh)
+    S_n = jnp.einsum("bnjh,bnjhd,bnjhp->bnhdp", decay_end, Bc, xc)
+
+    # inter-chunk recurrence over n: h_{n+1} = h_n * exp(cum_last_n) + S_n
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                 # (B,nc,nh)
+
+    def scan_body(h, inp):
+        s_n, dec = inp
+        h_out = h * dec[..., None, None] + s_n
+        return h_out, h  # emit state *entering* the chunk
+
+    h_init = (
+        jnp.zeros((Bb, nh, ds, hp), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+    )
+    h_init = pin(h_init, "batch", "model", None, None)
+    h_last, h_in = jax.lax.scan(
+        scan_body,
+        h_init,
+        (jnp.moveaxis(S_n, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    h_in = jnp.moveaxis(h_in, 0, 1)                         # (B,nc,nh,ds,hp)
+
+    # inter-chunk output: C_i · h_in * exp(cum_i)
+    y_inter = jnp.einsum("bnihd,bnhdp->bnihp", Cc, h_in) * jnp.exp(cum)[..., None]
+    y = (y_intra + y_inter).reshape(Bb, S, nh, hp)
+    return y, h_last
+
+
+class MambaCache(NamedTuple):
+    conv: jax.Array   # (B, k-1, conv_dim) last inputs to the causal conv
+    ssm: jax.Array    # (B, nh, ds, hp) fp32 state
+
+
+def init_mamba_cache(cfg: MambaConfig, batch: int, dtype) -> MambaCache:
+    return MambaCache(
+        conv=jnp.zeros((batch, cfg.conv_kernel - 1, cfg.conv_dim), dtype),
+        ssm=jnp.zeros((batch, cfg.n_heads, cfg.d_state, cfg.head_dim), jnp.float32),
+    )
+
+
+def mamba_train(p: Params, cfg: MambaConfig, x: jax.Array, constrain=None) -> jax.Array:
+    """Full-sequence forward (train / prefill). x (B,S,D) -> (B,S,D).
+
+    ``constrain(x, *axes)`` pins activation shardings (batch on dim0, heads /
+    channels on the model axis) — without the anchors SPMD's rematted backward
+    picks a conflicting layout and replicates the 33k-wide in_proj output
+    (32 GiB/device on jamba; refuted hypothesis H-ssd, EXPERIMENTS §Perf).
+    """
+    pin = constrain or (lambda t, *a: t)
+    B, S, D = x.shape
+    nh, hp, ds, ng = cfg.n_heads, cfg.head_dim, cfg.d_state, cfg.n_groups
+    zxbcdt = pin(linear(p["in_proj"], x), "batch", None, "model")
+    z, xbc, dt = _split_proj(cfg, zxbcdt)
+    xbc = pin(_causal_conv(p, cfg, xbc), "batch", None, "model")
+    xs = pin(
+        xbc[..., : cfg.d_inner].reshape(B, S, nh, hp), "batch", None, "model", None
+    )
+    B_ = xbc[..., cfg.d_inner : cfg.d_inner + ng * ds].reshape(B, S, ng, ds)
+    C_ = xbc[..., cfg.d_inner + ng * ds :].reshape(B, S, ng, ds)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, _ = _ssd_chunked(cfg, xs, dt, B_, C_, A, constrain=constrain)
+    y = y + (p["D_skip"][:, None] * xs.astype(jnp.float32))
+    y = pin(y.reshape(B, S, cfg.d_inner).astype(x.dtype), "batch", None, "model")
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z))
+    return linear(p["out_proj"], y)
+
+
+def mamba_decode(p: Params, cfg: MambaConfig, x: jax.Array, cache: MambaCache):
+    """One-token step. x (B,1,D) -> (y (B,1,D), new_cache). O(1) in context."""
+    B = x.shape[0]
+    nh, hp, ds, ng = cfg.n_heads, cfg.head_dim, cfg.d_state, cfg.n_groups
+    z, xbc, dt = _split_proj(cfg, linear(p["in_proj"], x))
+    xbc = xbc[:, 0]                                          # (B, conv_dim)
+    # conv ring: window = [cache.conv, xbc]
+    window = jnp.concatenate([cache.conv, xbc[:, None]], axis=1)  # (B,k,conv)
+    w = p["conv_w"].astype(xbc.dtype)
+    conv_out = jax.nn.silu(
+        jnp.einsum("bkc,kc->bc", window, w) + p["conv_b"].astype(xbc.dtype)
+    )
+    new_conv = window[:, 1:]
+    xs = conv_out[..., : cfg.d_inner].reshape(B, nh, hp)
+    B_ = conv_out[..., cfg.d_inner : cfg.d_inner + ng * ds].reshape(B, ng, ds)
+    C_ = conv_out[..., cfg.d_inner + ng * ds :].reshape(B, ng, ds)
+    rep = nh // ng
+    Bg = jnp.repeat(B_.astype(jnp.float32), rep, axis=1)     # (B,nh,ds)
+    Cg = jnp.repeat(C_.astype(jnp.float32), rep, axis=1)
+    dtv = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,nh)
+    A = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dtv * A)                                 # (B,nh)
+    xdt = xs.astype(jnp.float32) * dtv[..., None]            # (B,nh,hp)
+    h = cache.ssm * decay[..., None, None] + jnp.einsum("bhd,bhp->bhdp", Bg, xdt)
+    y = jnp.einsum("bhd,bhdp->bhp", Cg, h) + p["D_skip"][:, None] * xs.astype(jnp.float32)
+    y = y.reshape(B, 1, cfg.d_inner).astype(x.dtype)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z))
+    return linear(p["out_proj"], y), MambaCache(new_conv, h)

@@ -1,0 +1,225 @@
+"""Mixture-of-Experts layer with sort-based dispatch — the paper's model D as
+a first-class framework feature.
+
+Token routing *is* the paper's cluster sort (DESIGN.md §3): the expert id is
+the key's "most significant digit", expert-parallel shards are the cluster
+nodes, and dispatch is one MSD-radix ``all_to_all`` each way with **zero
+inter-shard merging** — the exact property the paper built model D for. The
+stable grouping sort inside ``partition_exchange`` preserves arrival order per
+expert (the paper's stability argument, doing real work here).
+
+Layout: experts are sharded over the ``model`` mesh axis; tokens entering the
+layer are sharded over ``(pod, data, model)`` (the reshard is a free view
+change for XLA). Fixed per-(sender, expert) capacity with overflow-drop
+follows GShard/Switch semantics; ``capacity_factor`` controls it, the train
+loop monitors the overflow signal (fault_tolerance.py treats routing collapse
+as an anomaly), and the aux load-balancing loss keeps the router near-uniform.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.cluster_sort import combine_exchange, partition_exchange
+from .layers import Params, linear_init
+
+DEFAULT_CAPACITY_FACTOR = 2.0
+
+
+class MoEConfig(NamedTuple):
+    d_model: int
+    d_ff: int                 # per-expert hidden dim
+    n_experts: int
+    top_k: int
+    capacity_factor: float = DEFAULT_CAPACITY_FACTOR
+    mlp_gated: bool = True
+    compress_dispatch: bool = False   # int8 a2a payloads (beyond paper)
+
+
+def moe_init(key, cfg: MoEConfig, dtype, *, ep_shards: int) -> Params:
+    """Expert weights stacked (E_pad, ...); E padded to a multiple of ep_shards
+    with dummy experts the router can never select (logits masked)."""
+    e_pad = math.ceil(cfg.n_experts / ep_shards) * ep_shards
+    ks = jax.random.split(key, 4)
+    s_in = cfg.d_model ** -0.5
+    s_out = cfg.d_ff ** -0.5
+    p = {
+        "router": linear_init(ks[0], cfg.d_model, e_pad, jnp.float32),
+        "w_in": (jax.random.normal(ks[1], (e_pad, cfg.d_model, cfg.d_ff)) * s_in).astype(dtype),
+        "w_out": (jax.random.normal(ks[2], (e_pad, cfg.d_ff, cfg.d_model)) * s_out).astype(dtype),
+    }
+    if cfg.mlp_gated:
+        p["w_gate"] = (
+            jax.random.normal(ks[3], (e_pad, cfg.d_model, cfg.d_ff)) * s_in
+        ).astype(dtype)
+    return p
+
+
+def router_probs(p: Params, cfg: MoEConfig, x: jax.Array):
+    """x (T, D) -> (probs (T, E_pad), top_idx (T, k), top_gate (T, k), aux_loss)."""
+    e_pad = p["router"]["w"].shape[-1]
+    logits = (x.astype(jnp.float32) @ p["router"]["w"]).astype(jnp.float32)
+    if e_pad != cfg.n_experts:  # mask dummy padding experts
+        pad_mask = jnp.arange(e_pad) >= cfg.n_experts
+        logits = jnp.where(pad_mask, -jnp.inf, logits)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_gate, top_idx = jax.lax.top_k(probs, cfg.top_k)
+    top_gate = top_gate / jnp.maximum(top_gate.sum(-1, keepdims=True), 1e-9)
+    # Switch-style aux loss: E * sum_e f_e * P_e  (f = token fraction, P = prob mass)
+    f = jnp.zeros((e_pad,), jnp.float32).at[top_idx.reshape(-1)].add(1.0)
+    f = f / jnp.maximum(f.sum(), 1.0)
+    P_mass = probs.mean(axis=0)
+    aux = cfg.n_experts * jnp.sum(f * P_mass)
+    return probs, top_idx, top_gate, aux
+
+
+def moe_apply_local(
+    p: Params,
+    cfg: MoEConfig,
+    x: jax.Array,
+    axis_name: str,
+    all_axes: tuple = (),
+):
+    """shard_map body. x: (T_loc, D) local token slice; expert weights already
+    sliced to (E_loc, ...) by shard_map in_specs. Returns (y (T_loc, D), aux,
+    overflow) with aux/overflow replicated over ``all_axes``."""
+    T, D = x.shape
+    ep = jax.lax.axis_size(axis_name)
+    e_loc = p["w_in"].shape[0]          # local experts (already sharded)
+    e_pad = e_loc * ep
+
+    # --- routing (router weights replicated) ---
+    probs, top_idx, top_gate, aux = router_probs(p, cfg, x)
+
+    # --- dispatch = paper model D: one-step MSD-radix all_to_all ---
+    keys = top_idx.reshape(-1).astype(jnp.int32)            # (T*k,) expert ids
+    vals = jnp.repeat(x, cfg.top_k, axis=0)                 # (T*k, D)
+    cap = max(1, int(cfg.capacity_factor * T * cfg.top_k / max(cfg.n_experts, 1)))
+    ex = partition_exchange(
+        keys, vals, keys, axis_name, capacity=cap, n_buckets=e_pad,
+        compress=cfg.compress_dispatch,
+    )
+    # recv: (ep, e_loc*cap, D) -> (e_loc, ep*cap, D) grouped per local expert
+    recv = ex.recv_values.reshape(ep, e_loc, cap, D).transpose(1, 0, 2, 3)
+    recv = recv.reshape(e_loc, ep * cap, D)
+    rmask = (ex.recv_src_slot.reshape(ep, e_loc, cap) >= 0).transpose(1, 0, 2)
+    rmask = rmask.reshape(e_loc, ep * cap)
+
+    # --- local expert FFN (the per-node OpenMP work of Fig 4) ---
+    h = jnp.einsum("etd,edf->etf", recv, p["w_in"].astype(recv.dtype))
+    if "w_gate" in p:
+        g = jnp.einsum("etd,edf->etf", recv, p["w_gate"].astype(recv.dtype))
+        h = jax.nn.silu(g) * h
+    else:
+        h = jax.nn.gelu(h)
+    y = jnp.einsum("etf,efd->etd", h, p["w_out"].astype(recv.dtype))
+    y = jnp.where(rmask[..., None], y, 0.0)
+
+    # --- combine = inverse exchange, then gate-weighted sum over k replicas ---
+    y = y.reshape(e_loc, ep, cap, D).transpose(1, 0, 2, 3).reshape(ep, e_loc * cap, D)
+    back = combine_exchange(y, ex, axis_name)               # (T*k, D)
+    back = back.reshape(T, cfg.top_k, D)
+    out = jnp.einsum("tkd,tk->td", back.astype(jnp.float32), top_gate)
+    overflow = ex.overflow
+    if all_axes:
+        aux = jax.lax.pmean(aux, all_axes)
+        rest = tuple(a for a in all_axes if a != axis_name)
+        if rest:  # overflow is already pmax'd over the EP axis
+            overflow = jax.lax.pmax(overflow, rest)
+    return out.astype(x.dtype), aux, overflow
+
+
+def moe_apply_ep_replicated(
+    p: Params,
+    cfg: MoEConfig,
+    x: jax.Array,
+    ep_axis: Optional[str] = None,
+    all_axes: tuple = (),
+):
+    """MoE forward with tokens *replicated* over the EP axis (decode path, and
+    the single-device fallback when ``ep_axis is None``).
+
+    Each EP shard routes the same tokens but computes only its local experts,
+    then contributions are psum'd over the EP axis. No all_to_all: for tiny
+    decode batches the duplicate routing FLOPs are cheaper than the collective
+    latency (hypothesis H-serve in EXPERIMENTS.md §Perf).
+    """
+    T, D = x.shape
+    ep = 1 if ep_axis is None else jax.lax.axis_size(ep_axis)
+    my = 0 if ep_axis is None else jax.lax.axis_index(ep_axis)
+    e_loc = p["w_in"].shape[0]
+
+    probs, top_idx, top_gate, aux = router_probs(p, cfg, x)
+
+    keys = top_idx.reshape(-1).astype(jnp.int32)             # (T*k,) global ids
+    local = keys - my * e_loc
+    mine = (local >= 0) & (local < e_loc)
+    bucket = jnp.where(mine, local, e_loc)                   # trash bucket e_loc
+    cap = max(1, int(cfg.capacity_factor * T * cfg.top_k / max(cfg.n_experts, 1)))
+
+    order = jnp.argsort(bucket, stable=True)
+    sorted_b = bucket[order]
+    counts = jnp.bincount(bucket, length=e_loc + 1).astype(jnp.int32)
+    offsets = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(counts)[:-1]])
+    pos = jnp.arange(keys.shape[0], dtype=jnp.int32) - offsets[sorted_b]
+    valid = (pos < cap) & (sorted_b < e_loc)
+    slot_sorted = jnp.where(valid, sorted_b * cap + pos, e_loc * cap)
+
+    vals = jnp.repeat(x, cfg.top_k, axis=0)                  # (T*k, D)
+    slab = jnp.zeros((e_loc * cap, D), x.dtype).at[slot_sorted].set(
+        vals[order], mode="drop"
+    )
+    smask = jnp.zeros((e_loc * cap,), bool).at[slot_sorted].set(True, mode="drop")
+    send_slot = (
+        jnp.full((keys.shape[0],), -1, jnp.int32)
+        .at[order]
+        .set(jnp.where(valid, slot_sorted, -1).astype(jnp.int32))
+    )
+
+    recv = slab.reshape(e_loc, cap, D)
+    h = jnp.einsum("etd,edf->etf", recv, p["w_in"].astype(recv.dtype))
+    if "w_gate" in p:
+        g = jnp.einsum("etd,edf->etf", recv, p["w_gate"].astype(recv.dtype))
+        h = jax.nn.silu(g) * h
+    else:
+        h = jax.nn.gelu(h)
+    y = jnp.einsum("etf,efd->etd", h, p["w_out"].astype(recv.dtype))
+    y = jnp.where(smask.reshape(e_loc, cap)[..., None], y, 0.0)
+
+    flat = y.reshape(e_loc * cap, D)
+    safe = jnp.clip(send_slot, 0, flat.shape[0] - 1)
+    back = jnp.where((send_slot >= 0)[:, None], flat[safe], 0.0)
+    back = back.reshape(T, cfg.top_k, D)
+    out = jnp.einsum("tkd,tk->td", back.astype(jnp.float32), top_gate)
+    overflow = jnp.max(counts[:e_loc]) > cap
+    if ep_axis is not None:
+        out = jax.lax.psum(out, ep_axis)
+        overflow = jax.lax.pmax(overflow, ep_axis)
+    if all_axes:
+        aux = jax.lax.pmean(aux, all_axes)
+        rest = tuple(a for a in all_axes if a != ep_axis)
+        if rest:
+            overflow = jax.lax.pmax(overflow, rest)
+    return out.astype(x.dtype), aux, overflow
+
+
+def moe_shard_specs(params: Params, mesh_axes=("pod", "data", "model"), ep_axis="model"):
+    """PartitionSpecs for calling moe_apply_local under shard_map.
+
+    Tokens shard over every mesh axis; experts over the EP axis; router
+    replicated. Returns (in_specs for (params, x), out_specs).
+    """
+    from jax.sharding import PartitionSpec as P
+
+    def leaf_spec(path):
+        return P() if path[0] == "router" else P(ep_axis)
+
+    p_spec = jax.tree_util.tree_map_with_path(
+        lambda kp, _: leaf_spec(tuple(k.key for k in kp)), params
+    )
+    x_spec = P(tuple(mesh_axes))
+    out_specs = (P(tuple(mesh_axes)), P(), P())
+    return (p_spec, x_spec), out_specs

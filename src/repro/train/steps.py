@@ -1,0 +1,287 @@
+"""Training and serving step functions (the things the dry-run lowers).
+
+* ``train_step``: CE loss (vocab-chunked so (tokens, V) logits never
+  materialize — mandatory at 256k vocab), optional MoE aux loss, grads,
+  AdamW update, optional microbatch gradient accumulation via lax.scan.
+* ``prefill_step``: full-sequence pass that fills the KV/SSM caches and
+  returns last-position logits only (a (1M, 256k) fp32 logits tensor would be
+  ~1 PB — serving returns what serving needs).
+* ``serve_decode_step``: one token through the stack with caches.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import rmsnorm
+from repro.models.transformer import (
+    ModelConfig,
+    ShardCtx,
+    _apply_block,
+    decode_step as model_decode_step,
+    forward,
+    init_cache,
+)
+from repro.optim.adamw import OptConfig, apply_updates
+
+
+# ------------------------------------------------------------ chunked CE ---
+def chunked_ce_loss(
+    x: jax.Array,            # (B, S, D) final hidden states (pre-unembed)
+    p_embed: dict,           # {"table": (V, D)} tied embedding (vocab-parallel)
+    labels: jax.Array,       # (B, S) int32; -1 = masked
+    cfg: ModelConfig,
+    ctx: ShardCtx,
+    *,
+    chunk: int = 512,
+) -> jax.Array:
+    """Mean CE, scanning vocab projection over *sequence* chunks.
+
+    Chunking must follow the replicated (sequence) axis, not the global token
+    count: a scan over global token chunks serializes cross-device data and
+    all-reduces every (c, V) logits chunk — 126 GiB/step on qwen3-train_4k
+    (refuted hypothesis H-loss, EXPERIMENTS §Perf). Here batch stays sharded;
+    logits are V-sharded over the EP axis (table is vocab-parallel) and the
+    gold logit is a second vocab-parallel lookup: dot(x, table[label]) —
+    no full-logits collective anywhere.
+    """
+    from repro.models.transformer import embed_tokens
+
+    B, S, D = x.shape
+    c = min(chunk, S)
+    while S % c:
+        c -= 1
+    nc = S // c
+    xc = jnp.moveaxis(x.reshape(B, nc, c, D), 1, 0)          # (nc, B, c, D)
+    yc = jnp.moveaxis(labels.reshape(B, nc, c), 1, 0)        # (nc, B, c)
+    table = p_embed["table"]
+
+    v_pad = table.shape[0]
+
+    def body(acc, inp):
+        xb, yb = inp                                          # (B,c,D), (B,c)
+        logits = jnp.einsum(
+            "bcd,vd->bcv", xb, table.astype(xb.dtype),
+            preferred_element_type=jnp.float32,
+        )
+        if v_pad != cfg.vocab_size:  # EP-padding rows never win
+            logits = jnp.where(jnp.arange(v_pad) < cfg.vocab_size, logits, -jnp.inf)
+        lz = jax.nn.logsumexp(logits, axis=-1)                # (B, c)
+        gold_emb = embed_tokens(p_embed, jnp.maximum(yb, 0), cfg, ctx)
+        gold = jnp.sum(xb.astype(jnp.float32) * gold_emb.astype(jnp.float32), -1)
+        valid = yb >= 0
+        loss = jnp.where(valid, lz - gold, 0.0)
+        return (acc[0] + loss.sum(), acc[1] + valid.sum()), None
+
+    body = jax.checkpoint(body)
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.zeros(()), jnp.zeros((), jnp.int32)), (xc, yc))
+    return tot / jnp.maximum(cnt, 1)
+
+
+def _hidden_states(params, cfg: ModelConfig, tokens, frontend_embeds, ctx, remat):
+    """Run the stack up to final norm, returning hidden states + stats."""
+    from repro.models.transformer import _apply_block, embed_tokens
+
+    x = embed_tokens(params["embed"], tokens, cfg, ctx)
+    if frontend_embeds is not None:
+        F = frontend_embeds.shape[1]
+        x = jnp.concatenate([frontend_embeds.astype(x.dtype), x[:, F:]], axis=1)
+    aux0 = jnp.zeros((), jnp.float32)
+    ovf0 = jnp.asarray(False)
+
+    def group_body(carry, gp):
+        x, aux, ovf = carry
+        x = ctx.constrain_batch(x)  # anchor the scan carry's batch sharding
+        stats = {"moe_aux": aux, "moe_overflow": ovf}
+        for i, (kind, ffn) in enumerate(zip(cfg.pattern, cfg.ffn_pattern)):
+            x, stats = _apply_block(gp[f"pos{i}"], cfg, kind, ffn, x, ctx, stats)
+        return (x, stats["moe_aux"], stats["moe_overflow"]), None
+
+    body = group_body
+    if remat:
+        policy = (
+            jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+            if cfg.remat_policy == "dots"
+            else None  # "none": recompute everything per group (the giants)
+        )
+        body = jax.checkpoint(group_body, policy=policy)
+    (x, aux, ovf), _ = jax.lax.scan(body, (x, aux0, ovf0), params["blocks"])
+    x = rmsnorm(params["final_norm"], x)
+    return x, {"moe_aux": aux / max(cfg.n_layers, 1), "moe_overflow": ovf}
+
+
+def loss_fn(
+    params,
+    cfg: ModelConfig,
+    batch: dict,
+    *,
+    ctx: ShardCtx = ShardCtx(),
+    aux_weight: float = 0.01,
+    loss_chunk: int = 512,
+    remat: bool = True,
+):
+    x, stats = _hidden_states(
+        params, cfg, batch["tokens"], batch.get("frontend_embeds"), ctx, remat
+    )
+    ce = chunked_ce_loss(x, params["embed"], batch["labels"], cfg, ctx, chunk=loss_chunk)
+    loss = ce + aux_weight * stats["moe_aux"]
+    return loss, {"ce": ce, **stats}
+
+
+def train_step(
+    params,
+    opt_state,
+    batch: dict,
+    *,
+    cfg: ModelConfig,
+    opt_cfg: OptConfig,
+    ctx: ShardCtx = ShardCtx(),
+    n_microbatch: int = 1,
+    loss_chunk: int = 512,
+    remat: bool = True,
+):
+    """One optimizer step (optionally accumulating over microbatches)."""
+
+    def grads_of(b):
+        (loss, stats), grads = jax.value_and_grad(
+            lambda p: loss_fn(
+                p, cfg, b, ctx=ctx, loss_chunk=loss_chunk, remat=remat
+            ),
+            has_aux=True,
+        )(params)
+        return loss, stats, grads
+
+    if n_microbatch == 1:
+        loss, stats, grads = grads_of(batch)
+    else:
+        def split(leaf):
+            B = leaf.shape[0]
+            return leaf.reshape(n_microbatch, B // n_microbatch, *leaf.shape[1:])
+
+        micro = jax.tree.map(split, batch)
+
+        def acc_body(carry, mb):
+            loss_a, grads_a = carry
+            loss, stats, grads = grads_of(mb)
+            return (
+                loss_a + loss / n_microbatch,
+                jax.tree.map(lambda a, g: a + g / n_microbatch, grads_a, grads),
+            ), stats
+
+        # (p*0) not zeros(): a bare-constant accumulator has no sharding and
+        # unifies the scan carry to replicated — a full f32 param copy per
+        # device (108 GiB on jamba; refuted hypothesis H-acc, EXPERIMENTS §Perf)
+        zero_g = jax.tree.map(lambda p: (p * 0).astype(jnp.float32), params)
+        (loss, grads), stats_seq = jax.lax.scan(acc_body, (jnp.zeros(()), zero_g), micro)
+        stats = jax.tree.map(lambda s: s[-1], stats_seq)
+
+    new_params, new_opt, metrics = apply_updates(params, grads, opt_state, opt_cfg)
+    metrics = {**metrics, "loss": loss, **{k: v for k, v in stats.items()}}
+    return new_params, new_opt, metrics
+
+
+# ---------------------------------------------------------------- serving ---
+def prefill_step(
+    params,
+    cfg: ModelConfig,
+    tokens: jax.Array,                      # (B, S)
+    *,
+    ctx: ShardCtx = ShardCtx(),
+    frontend_embeds: Optional[jax.Array] = None,
+    cache_len: Optional[int] = None,
+):
+    """Fill caches for the whole prompt; return (last_logits (B,V), cache)."""
+    from repro.models.attention import KVCache, attention_train, init_kv_cache
+    from repro.models.layers import embed, unembed
+    from repro.models.mamba2 import mamba_train
+    from repro.models.transformer import _apply_ffn, embed_tokens
+
+    B, S = tokens.shape
+    cache_len = cache_len or S
+    x = embed_tokens(params["embed"], tokens, cfg, ctx)
+    if frontend_embeds is not None:
+        F = frontend_embeds.shape[1]
+        x = jnp.concatenate([frontend_embeds.astype(x.dtype), x[:, F:]], axis=1)
+
+    pin = ctx.constrain_spec if ctx.mesh is not None else None
+    # pin heads only when H doesn't divide the TP axis (see _apply_block)
+    attn_pin = (
+        pin if (pin and cfg.n_heads % ctx.mesh.shape[ctx.ep_axis]) else None
+    )
+
+    def group_body(x, gp):
+        new_cache = {}
+        for i, (kind, ffn) in enumerate(zip(cfg.pattern, cfg.ffn_pattern)):
+            p = gp[f"pos{i}"]
+            h = rmsnorm(p["norm1"], x)
+            if kind.startswith("attn"):
+                acfg = cfg.attn_cfg(kind)
+                from repro.models.attention import _pin_heads, _project_qkv
+
+                positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+                q, k, v = _project_qkv(p["attn"], acfg, h, positions)
+                q, k, v = _pin_heads(q, k, v, attn_pin)
+                if acfg.sliding_window and S > acfg.sliding_window:
+                    from repro.models.attention import _blocked_local
+
+                    out = _blocked_local(q, k, v, acfg)
+                    w = acfg.sliding_window
+                    kc, vc = k[:, -w:], v[:, -w:]  # ring buffer, filled in order
+                    # ring slot of position S-w+j is (S-w+j) % w == (S+j) % w
+                    roll = (-(S % w)) % w
+                    kc = jnp.roll(kc, -roll, axis=1)
+                    vc = jnp.roll(vc, -roll, axis=1)
+                else:
+                    from repro.models.attention import _flash_causal
+
+                    out = _flash_causal(q, k, v, acfg, constrain=attn_pin)
+                    pad = cache_len - S
+                    kc = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                    vc = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                from repro.models.layers import linear
+
+                x = x + linear(p["attn"]["wo"], out.reshape(B, S, -1))
+                new_cache[f"pos{i}"] = KVCache(
+                    kc.astype(cfg.compute_dtype),
+                    vc.astype(cfg.compute_dtype),
+                    jnp.asarray(S, jnp.int32),
+                )
+            else:
+                mcfg = cfg.mamba_cfg()
+                from repro.models.mamba2 import MambaCache, _causal_conv, _split_proj, _ssd_chunked
+                from repro.models.layers import linear
+
+                z, xbc, dt = _split_proj(mcfg, linear(p["mamba"]["in_proj"], h))
+                xbc_conv = _causal_conv(p["mamba"], mcfg, xbc)
+                nh, hp, ds, ng = mcfg.n_heads, mcfg.head_dim, mcfg.d_state, mcfg.n_groups
+                xs = xbc_conv[..., : mcfg.d_inner].reshape(B, S, nh, hp)
+                B_ = xbc_conv[..., mcfg.d_inner : mcfg.d_inner + ng * ds].reshape(B, S, ng, ds)
+                C_ = xbc_conv[..., mcfg.d_inner + ng * ds :].reshape(B, S, ng, ds)
+                dtv = jax.nn.softplus(dt.astype(jnp.float32) + p["mamba"]["dt_bias"])
+                A = -jnp.exp(p["mamba"]["A_log"])
+                y, h_last = _ssd_chunked(mcfg, xs, dtv, B_, C_, A)
+                y = y + p["mamba"]["D_skip"][:, None] * xs.astype(jnp.float32)
+                y = y.reshape(B, S, mcfg.d_inner).astype(x.dtype)
+                y = rmsnorm(p["mamba"]["norm"], y * jax.nn.silu(z))
+                x = x + linear(p["mamba"]["out_proj"], y)
+                new_cache[f"pos{i}"] = MambaCache(
+                    conv=xbc[:, S - (mcfg.conv_kernel - 1) :, :].astype(cfg.compute_dtype),
+                    ssm=h_last,
+                )
+            if ffn is not None:
+                x, _ = _apply_ffn(p, cfg, x, ctx, {})
+        return x, new_cache
+
+    x, cache = jax.lax.scan(group_body, x, params["blocks"])
+    x_last = rmsnorm(params["final_norm"], x[:, -1:])
+    logits = unembed(params["embed"], x_last, cfg.vocab_size)[:, 0]
+    return logits, cache
+
+
+def serve_decode_step(params, cfg: ModelConfig, tokens, cache, *, ctx=ShardCtx()):
+    """One decode token for the whole batch; returns (logits (B,1,V), cache)."""
+    return model_decode_step(params, cfg, tokens, cache, ctx=ctx)

@@ -1,0 +1,81 @@
+"""Checkpoint manager: roundtrip, atomicity, async, gc, pipeline state."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.data.pipeline import SyntheticLM
+
+
+def _tree():
+    k = jax.random.PRNGKey(0)
+    return {
+        "a": jax.random.normal(k, (16, 8)),
+        "nested": {"b": jnp.arange(10, dtype=jnp.int32), "c": jnp.zeros((3,), jnp.bfloat16)},
+        "count": jnp.asarray(7, jnp.int32),
+    }
+
+
+def test_roundtrip_blocking(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    t = _tree()
+    mgr.save(3, t)
+    restored, step = mgr.restore(t)
+    assert step == 3
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32), np.asarray(b, np.float32))
+
+
+def test_async_save_and_latest(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    t = _tree()
+    mgr.save(1, t, blocking=False)
+    mgr.save(2, t, blocking=False)  # waits for the first automatically
+    mgr.wait()
+    assert mgr.latest_step() == 2
+
+
+def test_gc_keeps_last_k(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    t = _tree()
+    for s in (1, 2, 3, 4):
+        mgr.save(s, t)
+    steps = sorted(int(d.split("_")[1]) for d in os.listdir(tmp_path))
+    assert steps == [3, 4]
+
+
+def test_restore_missing_raises(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    with pytest.raises(FileNotFoundError):
+        mgr.restore(_tree())
+
+
+def test_restore_mesh_agnostic_resharding(tmp_path):
+    """Leaves can be restored onto explicit shardings (elastic path)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    mgr = CheckpointManager(str(tmp_path))
+    t = _tree()
+    mgr.save(5, t)
+    mesh = jax.make_mesh((1,), ("data",))
+    sh = jax.tree.map(lambda _: NamedSharding(mesh, P()), t)
+    restored, _ = mgr.restore(t, shardings=sh)
+    assert restored["a"].sharding == NamedSharding(mesh, P())
+
+
+def test_pipeline_state_resume_bit_exact(tmp_path):
+    pipe = SyntheticLM(vocab=101, batch=2, seq=8, seed=3)
+    it = iter(pipe)
+    for _ in range(4):
+        next(it)
+    saved = pipe.checkpoint_state()
+    want = next(iter(pipe))  # batch at step 4 (iterator advances state)
+
+    pipe2 = SyntheticLM(vocab=101, batch=2, seq=8, seed=0)
+    pipe2.restore_state(saved)
+    got = next(iter(pipe2))
+    np.testing.assert_array_equal(want["tokens"], got["tokens"])
+    np.testing.assert_array_equal(want["labels"], got["labels"])

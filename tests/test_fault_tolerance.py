@@ -1,0 +1,84 @@
+"""Fault-tolerance control plane: watchdog, anomaly monitor, recovery loop."""
+import time
+
+import pytest
+
+from repro.distributed.fault_tolerance import (
+    AnomalyMonitor,
+    StepTimeout,
+    StepWatchdog,
+    TrainingAnomaly,
+    run_with_recovery,
+)
+
+
+def test_watchdog_passes_fast_step():
+    with StepWatchdog(5.0):
+        time.sleep(0.01)
+
+
+def test_watchdog_raises_on_timeout():
+    with pytest.raises(StepTimeout):
+        with StepWatchdog(0.05):
+            time.sleep(0.2)
+
+
+def test_monitor_nan_loss():
+    with pytest.raises(TrainingAnomaly):
+        AnomalyMonitor().check({"loss": float("nan")})
+
+
+def test_monitor_grad_explosion():
+    with pytest.raises(TrainingAnomaly):
+        AnomalyMonitor(grad_norm_limit=10).check({"loss": 1.0, "grad_norm": 100.0})
+
+
+def test_monitor_overflow_patience():
+    m = AnomalyMonitor(overflow_patience=3)
+    m.check({"loss": 1.0, "moe_overflow": True})
+    m.check({"loss": 1.0, "moe_overflow": True})
+    with pytest.raises(TrainingAnomaly):
+        m.check({"loss": 1.0, "moe_overflow": True})
+    # streak resets on a clean step
+    m2 = AnomalyMonitor(overflow_patience=2)
+    m2.check({"loss": 1.0, "moe_overflow": True})
+    m2.check({"loss": 1.0, "moe_overflow": False})
+    m2.check({"loss": 1.0, "moe_overflow": True})  # no raise
+
+
+def test_recovery_restores_and_replays():
+    """A step that fails once recovers from the last checkpoint and finishes."""
+    state = {"ckpt": 0, "failed": False}
+    log = []
+
+    def step(i):
+        if i == 7 and not state["failed"]:
+            state["failed"] = True
+            return {"loss": float("nan")}
+        log.append(i)
+        return {"loss": 1.0}
+
+    def save(i):
+        state["ckpt"] = i
+
+    def restore():
+        return state["ckpt"]
+
+    summary = run_with_recovery(
+        n_steps=10, step_fn=step, save_fn=save, restore_fn=restore,
+        checkpoint_every=5, max_restarts=2,
+    )
+    assert summary["steps_run"] == 10
+    assert summary["restarts"] == 1
+    assert 7 in log  # replayed after restore
+
+
+def test_recovery_gives_up_after_max_restarts():
+    def bad_step(i):
+        return {"loss": float("nan")}
+
+    with pytest.raises(TrainingAnomaly):
+        run_with_recovery(
+            n_steps=3, step_fn=bad_step, save_fn=lambda i: None,
+            restore_fn=lambda: 0, max_restarts=2,
+        )

@@ -1,0 +1,60 @@
+"""Pallas bitonic kernels vs pure-jnp oracles (interpret mode, shape sweep)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.bitonic_sort import ref
+from repro.kernels.bitonic_sort.bitonic_sort import block_merge, block_sort, global_stage
+from repro.kernels.bitonic_sort.ops import pallas_sort
+
+RNG = np.random.default_rng(0)
+
+
+@pytest.mark.parametrize("block_n,n", [(64, 64), (64, 512), (128, 128), (128, 1024), (256, 2048)])
+@pytest.mark.parametrize("dtype", [np.float32, np.int32, np.float16])
+def test_block_sort_kernel_vs_ref(block_n, n, dtype):
+    x = (RNG.standard_normal(n) * 1000).astype(dtype)
+    got = np.asarray(block_sort(jnp.asarray(x), block_n, interpret=True))
+    want = np.asarray(ref.block_sort_ref(jnp.asarray(x), block_n))
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("block_n,n,k", [(64, 256, 128), (64, 256, 256), (128, 512, 256)])
+def test_block_merge_kernel_vs_ref(block_n, n, k):
+    # prepare a state consistent with stage k: run ref network up to this point
+    x = (RNG.standard_normal(n) * 100).astype(np.float32)
+    y = ref.block_sort_ref(jnp.asarray(x), block_n)
+    kk = 2 * block_n
+    while kk <= k:
+        j = kk // 2
+        while j >= block_n:
+            y = ref.global_stage_ref(y, j, kk)
+            j //= 2
+        got = np.asarray(block_merge(y, block_n, kk, interpret=True))
+        want = np.asarray(ref.block_merge_ref(y, block_n, kk))
+        np.testing.assert_array_equal(got, want)
+        y = want
+        kk *= 2
+
+
+@pytest.mark.parametrize("block_n,n", [(64, 128), (64, 1024), (128, 4096), (256, 16384), (1024, 8192)])
+@pytest.mark.parametrize("dtype", [np.float32, np.int32])
+def test_pallas_sort_end_to_end(block_n, n, dtype):
+    x = (RNG.standard_normal(n) * 10_000).astype(dtype)
+    got = np.asarray(pallas_sort(jnp.asarray(x), block_n=block_n))
+    np.testing.assert_array_equal(got, np.asarray(ref.full_sort_ref(jnp.asarray(x))))
+
+
+def test_pallas_sort_bf16():
+    x = jnp.asarray(RNG.standard_normal(1024), jnp.bfloat16)
+    got = pallas_sort(x, block_n=128)
+    np.testing.assert_array_equal(
+        np.asarray(got, np.float32), np.asarray(jnp.sort(x), np.float32)
+    )
+
+
+def test_pallas_sort_rejects_bad_shapes():
+    with pytest.raises(ValueError):
+        pallas_sort(jnp.zeros((2, 4)))
+    with pytest.raises(ValueError):
+        pallas_sort(jnp.zeros(100))  # not a power of two

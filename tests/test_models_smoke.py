@@ -1,0 +1,69 @@
+"""Per-arch smoke tests: reduced same-family config, one forward + one train
+step on CPU, asserting output shapes and finiteness (assignment requirement)."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ARCHS, reduced
+from repro.models.transformer import forward, model_init
+from repro.optim.adamw import OptConfig, init_opt_state
+from repro.train.steps import train_step
+
+ARCH_IDS = sorted(ARCHS)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = reduced(ARCHS[arch])
+    key = jax.random.PRNGKey(0)
+    params = model_init(key, cfg)
+    rng = np.random.default_rng(0)
+    B, S = 2, 16
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+    fe = None
+    if cfg.frontend != "none":
+        fe = jnp.asarray(
+            rng.standard_normal((B, cfg.n_frontend_tokens, cfg.d_model)), jnp.float32
+        )
+
+    logits, stats = forward(params, cfg, toks, frontend_embeds=fe, remat=False)
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits)).all(), arch
+
+    ocfg = OptConfig(peak_lr=1e-3, warmup_steps=2, total_steps=10)
+    opt = init_opt_state(params, ocfg)
+    batch = {"tokens": toks, "labels": jnp.roll(toks, -1, axis=1)}
+    if fe is not None:
+        batch["frontend_embeds"] = fe
+    p2, opt2, metrics = jax.jit(
+        functools.partial(train_step, cfg=cfg, opt_cfg=ocfg, loss_chunk=8)
+    )(params, opt, batch)
+    assert np.isfinite(float(metrics["loss"])), arch
+    assert np.isfinite(float(metrics["grad_norm"])), arch
+    # params actually moved
+    moved = any(
+        not np.allclose(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2))
+        if a.dtype in (jnp.float32, jnp.bfloat16)
+    )
+    assert moved, arch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_configs_match_published_sizes(arch):
+    expect = {
+        "dbrx-132b": 132, "granite-moe-3b-a800m": 3.3, "internvl2-2b": 1.8,
+        "qwen3-0.6b": 0.6, "command-r-35b": 32, "qwen2-7b": 7.1,
+        "gemma3-12b": 12, "musicgen-medium": 1.4, "mamba2-1.3b": 1.3,
+        "jamba-1.5-large-398b": 398,
+    }[arch]
+    got = ARCHS[arch].param_count() / 1e9
+    assert 0.75 * expect <= got <= 1.25 * expect, (arch, got, expect)
+
+
+def test_active_params_moe():
+    assert ARCHS["dbrx-132b"].active_param_count() / 1e9 == pytest.approx(36, rel=0.1)
+    assert ARCHS["jamba-1.5-large-398b"].active_param_count() / 1e9 == pytest.approx(94, rel=0.1)

@@ -1,0 +1,79 @@
+"""Sharding rules: every param leaf of every arch gets a valid spec; fit_spec
+degrades gracefully; radix partitioners keep the bucket->shard map ordered."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ARCHS
+from repro.core.radix import decimal_msd_bucket, range_bucket, splitter_bucket
+from repro.distributed.sharding import fit_spec, param_specs
+from repro.models.transformer import model_init
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_every_param_leaf_gets_a_spec(arch):
+    cfg = ARCHS[arch]
+    shapes = jax.eval_shape(
+        lambda k: model_init(k, cfg, ep_shards=16), jax.random.PRNGKey(0)
+    )
+    specs = param_specs(shapes)
+    flat_s, _ = jax.tree_util.tree_flatten(specs, is_leaf=lambda x: isinstance(x, P))
+    flat_l = jax.tree_util.tree_flatten(shapes)[0]
+    assert len(flat_s) == len(flat_l)
+    for spec, leaf in zip(flat_s, flat_l):
+        assert isinstance(spec, P)
+        assert len(spec) == leaf.ndim, (spec, leaf.shape)
+        # big weights must be sharded on at least one axis (routers are the
+        # largest intentionally-replicated leaves, a few M params)
+        if leaf.size > 16_000_000:
+            assert any(a is not None for a in spec), (spec, leaf.shape)
+
+
+def test_fit_spec_drops_non_dividing_axes():
+    mesh = jax.make_mesh((1,), ("data",))  # sizes: data=1
+    # fabricate a mesh-like with shape dict for the pure function
+    class M:
+        axis_names = ("pod", "data")
+        shape = {"pod": 2, "data": 16}
+
+    assert fit_spec((1, 5), P(("pod", "data"), None), M()) == P(None, None)
+    assert fit_spec((32, 5), P(("pod", "data"), None), M()) == P(("pod", "data"), None)
+    assert fit_spec((2, 5), P(("pod", "data"), None), M()) == P("pod", None)
+    assert fit_spec((16, 5), P("data", "pod"), M()) == P("data", None)
+
+
+ints = st.lists(st.integers(0, 999), min_size=1, max_size=200)
+
+
+@given(ints)
+def test_decimal_bucket_is_msd(xs):
+    x = jnp.asarray(np.asarray(xs, np.int32))
+    b = np.asarray(decimal_msd_bucket(x, digits=3))
+    assert ((b == np.clip(np.asarray(xs) // 100, 0, 9))).all()
+
+
+@given(ints, st.integers(1, 4))
+def test_range_bucket_monotone(xs, log_b):
+    """Bucket ids are monotone in the key — the property that makes the
+    contiguous bucket->shard map preserve global sorted order."""
+    nb = 1 << log_b
+    x = np.sort(np.asarray(xs, np.int32))
+    b = np.asarray(range_bucket(jnp.asarray(x), n_buckets=nb, lo=0, hi=1000))
+    assert (np.diff(b) >= 0).all()
+    assert b.min() >= 0 and b.max() < nb
+
+
+@given(ints)
+def test_splitter_bucket_monotone_and_balancedish(xs):
+    x = np.asarray(xs, np.int32)
+    spl = np.quantile(x, [0.25, 0.5, 0.75]).astype(np.int32)
+    spl = np.sort(spl)
+    b = np.asarray(splitter_bucket(jnp.asarray(np.sort(x)), jnp.asarray(spl)))
+    assert (np.diff(b) >= 0).all()
+    assert b.max() <= 3

@@ -1,0 +1,53 @@
+"""End-to-end system tests: the training driver and serving driver run,
+converge, checkpoint-restart works, and the dry-run machinery's loop-aware
+collective accounting parses real HLO."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.serve import main as serve_main
+from repro.launch.train import main as train_main
+
+
+def test_train_driver_end_to_end(tmp_path):
+    losses = train_main([
+        "--arch", "qwen3-0.6b", "--reduced", "--steps", "12", "--batch", "4",
+        "--seq", "32", "--lr", "5e-3", "--ckpt-dir", str(tmp_path),
+        "--ckpt-every", "6", "--log-every", "100",
+    ])
+    assert losses[-1] < losses[0]
+    from repro.checkpoint.manager import CheckpointManager
+
+    assert CheckpointManager(str(tmp_path)).latest_step() == 12
+
+
+def test_serve_driver_end_to_end():
+    gen = serve_main([
+        "--arch", "qwen3-0.6b", "--reduced", "--batch", "2",
+        "--prompt-len", "12", "--gen", "4",
+    ])
+    assert gen.shape == (2, 4)
+
+
+def test_collective_parser_on_real_hlo():
+    """Loop-aware accounting: a psum inside a scan counts trip_count times."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.launch.dryrun import collective_bytes
+
+    mesh = jax.make_mesh((1,), ("x",))
+
+    def body(x):
+        def inner(c, i):
+            return c + (jax.lax.psum(x * i, "x")).sum(), None
+
+        out, _ = jax.lax.scan(inner, 0.0, jnp.arange(5.0))
+        return out[None]
+
+    f = jax.jit(jax.shard_map(body, mesh=mesh, in_specs=P("x"), out_specs=P("x")))
+    txt = f.lower(jnp.ones((8, 4), jnp.float32)).compile().as_text()
+    res = collective_bytes(txt)
+    # x*i is loop-varying so the psum must stay inside the while: 5 x 128 bytes
+    # (or the compiler removed the trivial 1-device collective entirely — then
+    # both counts are zero and the parser must agree)
+    assert res["total_bytes"] in (640, 0), res

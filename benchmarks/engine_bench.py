@@ -1,0 +1,97 @@
+"""Engine benchmark: reproduce the paper's crossover curve, tuned vs default.
+
+Sweeps data sizes over the four strategies on a forced multi-device host
+mesh, autotunes a plan per size bucket, and reports what the tuned plan buys
+over the pre-engine default rule ("cluster if mesh else shared_hybrid").
+The paper's finding this automates: the shared hybrid wins small sizes, the
+cluster MSD-radix model wins large ones — where the crossover sits depends
+on the machine, which is exactly why it's measured, not hard-coded.
+
+Prints ``name,us_per_call,derived`` CSV rows (benchmark harness contract).
+
+  PYTHONPATH=src python benchmarks/engine_bench.py            # full sweep
+  PYTHONPATH=src python benchmarks/engine_bench.py --smoke    # CI-sized
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
+sys.path.insert(
+    0, os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+)
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="tiny sizes for CI")
+    ap.add_argument("--sizes", default="", help="comma-separated overrides")
+    ap.add_argument("--reps", type=int, default=0, help="0 = auto")
+    ap.add_argument("--plans", default="", help="persist tuned plans to this JSON")
+    args = ap.parse_args(argv)
+
+    from repro.engine.planner import (
+        Planner,
+        SortPlan,
+        _time_plan,
+        default_plan,
+        plan_from_strategy,
+    )
+
+    if args.sizes:
+        sizes = [int(s) for s in args.sizes.split(",")]
+    elif args.smoke:
+        sizes = [1 << 12, 1 << 14]
+    else:
+        sizes = [1 << p for p in (14, 16, 18, 20, 22)]
+    reps = args.reps or (1 if args.smoke else 3)
+
+    mesh = jax.make_mesh((len(jax.devices()),), ("x",))
+    planner = Planner(args.plans or None)
+    rng = np.random.default_rng(0)
+    rows = []
+
+    strategies = {
+        "A_shared_merge": plan_from_strategy("shared_merge"),
+        "B_shared_hybrid": plan_from_strategy("shared_hybrid"),
+        "C_distributed_merge": plan_from_strategy("distributed_merge"),
+        "D_cluster": SortPlan("cluster", capacity_factor=2.0, mode="splitters"),
+    }
+    for n in sizes:
+        x = jnp.asarray(rng.integers(100, 1000, size=n).astype(np.int32))
+        timings = {}
+        for label, plan in strategies.items():
+            us = _time_plan(plan, x, mesh, "x", reps=reps)
+            timings[label] = us
+            rows.append((f"engine/{label}/n={n}", us, ""))
+
+        tuned = planner.autotune(n, jnp.int32, mesh=mesh, axis="x",
+                                 quick=args.smoke, reps=reps)
+        t_tuned = _time_plan(tuned, x, mesh, "x", reps=reps)
+        t_default = _time_plan(default_plan(mesh), x, mesh, "x", reps=reps)
+        rows.append(
+            (
+                f"engine/tuned/n={n}",
+                t_tuned,
+                f"plan={tuned.strategy}:{tuned.local_impl};"
+                f"vs_default={t_default / t_tuned:.2f}x",
+            )
+        )
+        rows.append((f"engine/default_rule/n={n}", t_default, ""))
+
+    if args.plans:
+        planner.save()
+        print(f"# tuned plans saved to {args.plans}", file=sys.stderr)
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -20,6 +20,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core import partition_exchange, combine_exchange
+from repro.engine import argsort, sort_kv
 from repro.models.moe import MoEConfig, moe_init, moe_apply_ep_replicated
 
 mesh = jax.make_mesh((2, 4), ("data", "model"))
@@ -53,6 +54,21 @@ expected_shard = np.asarray(expert_of) * 4 // E  # contiguous bucket->shard map
 assert (shard_tag == expected_shard).all()
 assert np.allclose(np.asarray(out) % 1000, np.asarray(tokens) % 1000)
 print("dispatch: every token visited exactly its expert's shard and returned ✓")
+
+# --- record sort: the engine sorts (key, payload) pairs across the mesh -----
+# same primitive, now as a user-facing API: tokens (the values) follow their
+# routing keys through the one all_to_all, stably — engine.sort_kv/argsort.
+smesh = jax.make_mesh((8,), ("nodes",))
+n = 4096
+rec_keys = jnp.asarray(rng.integers(0, 1000, n), jnp.int32)
+rec_payload = jnp.asarray(rng.standard_normal((n, 8)), jnp.float32)
+sk, sv = sort_kv(rec_keys, {"tok": rec_payload}, mesh=smesh, axis="nodes")
+ref = np.argsort(np.asarray(rec_keys), kind="stable")
+assert (np.asarray(sk) == np.asarray(rec_keys)[ref]).all()
+assert (np.asarray(sv["tok"]) == np.asarray(rec_payload)[ref]).all()
+idx = argsort(rec_keys, mesh=smesh, axis="nodes")
+assert (np.asarray(idx) == ref).all()
+print("engine: distributed sort_kv/argsort == np.argsort(stable) reference ✓")
 
 # --- full MoE layer equals the dense computation ----------------------------
 cfg = MoEConfig(d_model=16, d_ff=8, n_experts=4, top_k=2, capacity_factor=8.0)

@@ -37,5 +37,24 @@ k = pallas_sort(jnp.asarray(x[:65536]), block_n=1024)
 assert (np.asarray(k) == np.sort(x[:65536])).all()
 print("Pallas   VMEM bitonic kernel         OK")
 
+# the engine sorts records, not just keys: sort_kv carries any values pytree
+# along with the keys (stable — equal keys keep arrival order)
+from repro.engine import sort_kv, argsort, SortService
+
+payload = {"row": jnp.arange(xj.shape[0]), "feat": jnp.ones((xj.shape[0], 4))}
+sk, sv = sort_kv(xj, payload)
+order = np.argsort(x, kind="stable")
+assert (np.asarray(sk) == want).all() and (np.asarray(sv["row"]) == order).all()
+assert (np.asarray(argsort(xj)) == order).all()
+print("engine   sort_kv / argsort           OK")
+
+# the serving front door: ragged batches, shape-bucketed, zero re-traces
+svc = SortService()
+outs = svc.submit([x[:1000], x[:800], x[:500]])
+assert all((o == np.sort(x[:n])).all() for o, n in zip(outs, (1000, 800, 500)))
+svc.submit([x[:900], x[:700]])  # same buckets -> zero new compilations
+assert svc.cache.stats()["misses"] == 2  # one executable per (1024,) / (512,)
+print("engine   SortService bucket cache    OK")
+
 # models C and D need a multi-device mesh — see examples/distributed_sort_demo.py
 print("\nfor models C/D run: python examples/distributed_sort_demo.py")

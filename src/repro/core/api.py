@@ -1,24 +1,23 @@
-"""Public sort API — strategy dispatch over the paper's four models.
+"""Public sort API — a thin wrapper over the autotuned plan engine.
 
-``sort(x)``                      -> fastest single-device path (model B)
+``sort(x)``                      -> planner-selected path (tuned plan if the
+                                    engine has one for this size/dtype/mesh,
+                                    else the paper's default rule: model B on
+                                    one device, model D on a mesh)
 ``sort(x, mesh=..., axis=...)``  -> model D cluster sort (production path)
 ``strategy=`` overrides: 'shared_merge' (A), 'shared_hybrid' (B),
-'distributed_merge' (C), 'cluster' (D).
+'distributed_merge' (C), 'cluster' (D) — these bypass the planner entirely.
+
+Key-value sorting, argsort, and the batched serving front door live in
+``repro.engine`` (kv.py / service.py).
 """
 from __future__ import annotations
 
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
-
-from .cluster_sort import cluster_sort
-from .distributed_sort import distributed_merge_sort
-from .shared_sort import shared_memory_sort
 
 __all__ = ["sort"]
-
-_STRATEGIES = ("shared_merge", "shared_hybrid", "distributed_merge", "cluster")
 
 
 def sort(
@@ -27,27 +26,28 @@ def sort(
     mesh=None,
     axis: Optional[str] = None,
     strategy: Optional[str] = None,
+    plan=None,
     n_threads: int = 8,
     ascending: bool = True,
     **kwargs,
 ):
-    """Sort the last axis of ``x`` using one of the paper's parallel models."""
-    if strategy is None:
-        strategy = "cluster" if mesh is not None else "shared_hybrid"
-    if strategy not in _STRATEGIES:
-        raise ValueError(f"strategy must be one of {_STRATEGIES}")
-    if strategy == "shared_merge":
-        return shared_memory_sort(
-            x, n_threads=n_threads, local_impl="merge", ascending=ascending
-        )
-    if strategy == "shared_hybrid":
-        return shared_memory_sort(
-            x, n_threads=n_threads, local_impl="xla", ascending=ascending
-        )
-    if mesh is None or axis is None:
-        raise ValueError(f"strategy {strategy!r} requires mesh= and axis=")
-    if strategy == "distributed_merge":
-        out = distributed_merge_sort(x, mesh, axis, **kwargs)
-        return out if ascending else jnp.flip(out, -1)
-    slab, valid = cluster_sort(x, mesh, axis, **kwargs)
-    return slab, valid
+    """Sort the last axis of ``x`` using one of the paper's parallel models.
+
+    Precedence: explicit ``strategy=`` > explicit ``plan=`` (a
+    ``repro.engine.SortPlan``) > tuned plan from the default planner >
+    the paper's hard-coded rule.
+    """
+    from repro.engine.planner import default_planner, plan_from_strategy, run_plan
+
+    if strategy is not None:
+        plan = plan_from_strategy(strategy, n_threads=n_threads)
+    elif plan is None:
+        plan = default_planner().lookup(x.shape[-1], x.dtype, mesh)
+        # with mesh= the documented return contract is cluster_sort's
+        # (slab, valid) — only an explicit strategy=/plan= may change it, so
+        # tuned non-cluster plans don't apply here
+        if mesh is not None and (plan is None or plan.strategy != "cluster"):
+            plan = plan_from_strategy("cluster")
+        elif plan is None:  # pre-engine rule, honouring the n_threads argument
+            plan = plan_from_strategy("shared_hybrid", n_threads=n_threads)
+    return run_plan(plan, x, mesh=mesh, axis=axis, ascending=ascending, **kwargs)

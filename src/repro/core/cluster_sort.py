@@ -24,7 +24,7 @@ framework.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
+from functools import lru_cache, partial
 from typing import Any, Callable, Optional
 
 import jax
@@ -41,6 +41,7 @@ __all__ = [
     "combine_exchange",
     "cluster_sort_local",
     "cluster_sort",
+    "slab_geometry",
 ]
 
 
@@ -123,9 +124,11 @@ def partition_exchange(
     bucket * P // n_buckets) so bucket order == shard order (global sortedness
     / expert grouping both rely on this). ``capacity`` is per (sender, bucket).
 
-    ``compress=True`` ships value payloads as int8 with a per-element f32
-    scale (beyond-paper: ~0.53x wire bytes for bf16 tokens; quantization is
-    straight-through for autodiff — the dequantized values carry gradients).
+    ``compress=True`` ships *float* value payloads as int8 with a per-element
+    f32 scale (beyond-paper: ~0.53x wire bytes for bf16 tokens; quantization
+    is straight-through for autodiff — the dequantized values carry
+    gradients). Integer leaves always travel uncompressed: quantization is
+    lossy and would corrupt indices/ids.
 
     Returns slabs of shape (P, B_loc * capacity): row j = what shard j sent me,
     laid out as (B_loc, capacity) for my local buckets.
@@ -180,9 +183,13 @@ def partition_exchange(
     if values is None:
         recv_values = None
     elif compress:
+        # int8 quantization is lossy and only meaningful for float payloads;
+        # integer leaves (indices, ids) ship uncompressed to stay exact
         recv_values = jax.tree.map(
-            lambda v: _compressed_a2a(axis_name, P_, row)(v).reshape(
-                (P_, row) + v.shape[1:]
+            lambda v: (
+                _compressed_a2a(axis_name, P_, row)(v).reshape((P_, row) + v.shape[1:])
+                if jnp.issubdtype(v.dtype, jnp.floating)
+                else a2a(v.reshape((P_, row) + v.shape[1:]))
             ),
             slab_values,
         )
@@ -229,6 +236,23 @@ def combine_exchange(
     return jax.tree.map(gather, returned)
 
 
+def slab_geometry(mode: str, m: int, P_: int, capacity_factor: float):
+    """Exchange geometry for model D: (part_buckets, n_buckets, capacity).
+
+    ``part_buckets`` is what the partitioner emits (10 in the paper's decimal
+    mode, P otherwise); ``n_buckets`` rounds it up to the nearest multiple of
+    P so ``partition_exchange``'s ``B % P == 0`` contract holds for any node
+    count (buckets 10..n_buckets-1 simply stay empty).  ``capacity`` is sized
+    per *bucket* — a uniform load puts ~m/part_buckets keys in each (sender,
+    bucket) pair, so deriving it from P (the old behaviour) under-provisioned
+    exactly when buckets outnumber shards.
+    """
+    part_buckets = 10 if mode == "decimal" else P_
+    n_buckets = -(-part_buckets // P_) * P_
+    cap = min(m, max(1, -(-int(capacity_factor * m) // part_buckets)))
+    return part_buckets, n_buckets, cap
+
+
 def cluster_sort_local(
     local: jax.Array,
     axis_name: str,
@@ -239,19 +263,48 @@ def cluster_sort_local(
     local_impl: str = "xla",
 ):
     """shard_map body for model D. local: (m,) shard. Returns
-    (sorted_slab (P*C,), my_count, overflow): entries [0, my_count) of the slab
-    are this shard's contiguous range of the globally sorted output."""
+    (sorted_slab (B/P*C per shard,), my_count, overflow): entries
+    [0, my_count) of the slab are this shard's contiguous range of the
+    globally sorted output. ``n_buckets`` must be a multiple of the axis
+    size; the contiguous bucket -> shard map keeps global order
+    (DESIGN.md §2)."""
     P_ = jax.lax.axis_size(axis_name)
     idx = jax.lax.axis_index(axis_name)
-    bucket = partitioner(local)
-    # contiguous bucket -> shard map keeps global order (DESIGN.md §2)
-    dest = (bucket.astype(jnp.int32) * P_) // n_buckets
-    ex = partition_exchange(local, None, dest, axis_name, capacity=capacity)
+    bucket = partitioner(local).astype(jnp.int32)
+    ex = partition_exchange(
+        local, None, bucket, axis_name, capacity=capacity, n_buckets=n_buckets
+    )
     flat = ex.recv_keys.reshape(-1)
     sorted_slab = fast_local_sort(flat, ascending=True, impl=local_impl)
-    global_counts = jax.lax.psum(ex.counts, axis_name)  # (P,)
-    my_count = global_counts[idx]
+    global_counts = jax.lax.psum(ex.counts, axis_name)  # (n_buckets,)
+    owner = (jnp.arange(n_buckets, dtype=jnp.int32) * P_) // n_buckets
+    my_count = jnp.sum(jnp.where(owner == idx, global_counts, 0)).astype(jnp.int32)
     return sorted_slab, my_count[None], ex.overflow
+
+
+@lru_cache(maxsize=256)
+def _compiled_cluster_sort(
+    mesh, axis, mode, capacity, part_buckets, n_buckets, digits, lo, hi, local_impl
+):
+    """One jitted shard_map per static config — repeated cluster_sort calls
+    (serving traffic, autotune reps) reuse the traced executable instead of
+    rebuilding fresh closures every call."""
+    part = make_partitioner(
+        mode, n_buckets=part_buckets, digits=digits, lo=lo, hi=hi, axis_name=axis
+    )
+    body = partial(
+        cluster_sort_local,
+        axis_name=axis,
+        capacity=capacity,
+        partitioner=part,
+        n_buckets=n_buckets,
+        local_impl=local_impl,
+    )
+    return jax.jit(
+        jax.shard_map(
+            body, mesh=mesh, in_specs=P(axis), out_specs=(P(axis), P(axis), P())
+        )
+    )
 
 
 def cluster_sort(
@@ -279,34 +332,13 @@ def cluster_sort(
     if n % P_:
         raise ValueError(f"n={n} must divide axis size {P_}")
     m = n // P_
-    n_buckets = 10 if mode == "decimal" else P_
-    cap = min(m, max(1, int(capacity_factor * m / P_)))
+    part_buckets, n_buckets, cap = slab_geometry(mode, m, P_, capacity_factor)
 
     for _ in range(max_retries + 1):
-        part = make_partitioner(
-            mode,
-            n_buckets=n_buckets,
-            digits=digits,
-            lo=lo,
-            hi=hi,
-            axis_name=axis,
+        fn = _compiled_cluster_sort(
+            mesh, axis, mode, cap, part_buckets, n_buckets, digits, lo, hi, local_impl
         )
-        body = partial(
-            cluster_sort_local,
-            axis_name=axis,
-            capacity=cap,
-            partitioner=part,
-            n_buckets=n_buckets,
-            local_impl=local_impl,
-        )
-        slab, counts, overflow = jax.jit(
-            jax.shard_map(
-                body,
-                mesh=mesh,
-                in_specs=P(axis),
-                out_specs=(P(axis), P(axis), P()),
-            )
-        )(x)
+        slab, counts, overflow = fn(x)
         if not bool(overflow):
             C_total = slab.shape[0] // P_
             pos = jnp.arange(slab.shape[0]) % C_total

@@ -17,7 +17,7 @@ the paper's lock-step rounds).
 """
 from __future__ import annotations
 
-from functools import partial
+from functools import lru_cache, partial
 
 import jax
 import jax.numpy as jnp
@@ -70,9 +70,15 @@ def distributed_merge_sort(x: jax.Array, mesh, axis: str, *, local_impl: str = "
     if n % P_:
         raise ValueError(f"n={n} must divide device count {P_}")
 
-    body = partial(merge_tree_local, axis_name=axis, local_impl=local_impl)
-    out = jax.shard_map(
-        body, mesh=mesh, in_specs=P(axis), out_specs=P(axis)
-    )(x)
+    out = _compiled_merge_tree(mesh, axis, local_impl)(x)
     # device 0's buffer occupies the first n entries of the (P*n,) output
     return out[:n]
+
+
+@lru_cache(maxsize=64)
+def _compiled_merge_tree(mesh, axis, local_impl):
+    """Cache the jitted shard_map so repeated calls don't re-trace."""
+    body = partial(merge_tree_local, axis_name=axis, local_impl=local_impl)
+    return jax.jit(
+        jax.shard_map(body, mesh=mesh, in_specs=P(axis), out_specs=P(axis))
+    )

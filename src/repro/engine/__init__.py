@@ -1,0 +1,40 @@
+"""repro.engine — autotuned sort-plan engine (serving-grade front end).
+
+planner  : SortPlan + autotuner + persistent JSON plan cache
+cache    : compiled-executable cache with pow2 shape bucketing
+kv       : sort_kv / argsort / sort_pairs / topk — records, not just keys
+service  : SortService — ragged batches in, zero-recompile sorts out
+"""
+from .cache import CompiledCache, size_bucket
+from .kv import argsort, cluster_sort_kv, sort_kv, sort_pairs, topk
+from .planner import (
+    Planner,
+    SortPlan,
+    autotune,
+    default_planner,
+    mesh_fingerprint,
+    plan_from_strategy,
+    plan_key,
+    run_plan,
+)
+from .service import ServiceStats, SortService
+
+__all__ = [
+    "CompiledCache",
+    "size_bucket",
+    "argsort",
+    "cluster_sort_kv",
+    "sort_kv",
+    "sort_pairs",
+    "topk",
+    "Planner",
+    "SortPlan",
+    "autotune",
+    "default_planner",
+    "mesh_fingerprint",
+    "plan_from_strategy",
+    "plan_key",
+    "run_plan",
+    "ServiceStats",
+    "SortService",
+]

@@ -1,0 +1,56 @@
+"""Compiled-plan cache: pow2 shape bucketing so serving traffic never re-traces.
+
+Serving requests arrive with ragged lengths; tracing/compiling an XLA
+executable per exact shape would dominate latency.  Instead every request is
+padded to its power-of-two *bucket* (tail filled with sort sentinels, so the
+valid prefix of the sorted output is exactly the answer) and one ahead-of-time
+compiled executable is kept per (kind, bucket shape, dtype, plan) key.  After
+warmup, a submit is a pure numpy pad + one AOT executable call — zero jax
+tracing or lowering on the hot path.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+
+from repro.core.bitonic import next_pow2
+
+__all__ = ["size_bucket", "CompiledCache"]
+
+
+def size_bucket(n: int, *, min_bucket: int = 8) -> int:
+    """Pad target for a length-n request (pow2, floored at min_bucket)."""
+    return max(min_bucket, next_pow2(n))
+
+
+@dataclass
+class CompiledCache:
+    """key -> AOT-compiled executable, with hit/miss (=compile) counters."""
+
+    executables: Dict[Tuple, Any] = field(default_factory=dict)
+    hits: int = 0
+    misses: int = 0
+
+    def get_or_build(self, key: Tuple, build: Callable[[], Callable], example_args):
+        """Return the executable for ``key``; trace+compile it on first use.
+
+        ``build()`` returns the traceable python callable; ``example_args``
+        are ShapeDtypeStructs (or arrays) fixing the input signature.
+        """
+        exe = self.executables.get(key)
+        if exe is not None:
+            self.hits += 1
+            return exe
+        self.misses += 1
+        exe = jax.jit(build()).lower(*example_args).compile()
+        self.executables[key] = exe
+        return exe
+
+    def stats(self) -> dict:
+        return {
+            "entries": len(self.executables),
+            "hits": self.hits,
+            "misses": self.misses,
+        }

@@ -1,0 +1,243 @@
+"""Key–value sorting — the cluster model finally sorts records, not just keys.
+
+``sort_kv`` / ``argsort`` / ``sort_pairs`` ride the existing
+``partition_exchange`` values path (model D's one-step MSD-radix all_to_all),
+so an arbitrary pytree of per-record payloads ships alongside the keys in the
+same collective — including ``compress=True`` int8 wire mode.  Stability falls
+out of the slab layout: within a bucket, receive order is (sender shard, slot
+in sender's slab) which *is* global arrival order, so a stable local argsort
+of the received slab reproduces ``np.argsort(kind='stable')`` exactly.
+
+Single-device calls (``mesh=None``) use a stable XLA argsort + gather; the
+distributed path requires 1-D keys with length divisible by the axis size.
+"""
+from __future__ import annotations
+
+from functools import lru_cache, partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.cluster_sort import partition_exchange, slab_geometry
+from repro.core.radix import make_partitioner
+
+__all__ = ["sort_kv", "sort_pairs", "argsort", "topk", "cluster_sort_kv"]
+
+
+# --------------------------------------------------------------- local path ---
+def _rev_key(keys: jax.Array) -> jax.Array:
+    """Order-reversing self-inverse bijection: negation for floats, bitwise
+    NOT for ints (~x = -x-1 is strictly decreasing; even INT_MIN is safe)."""
+    if jnp.issubdtype(keys.dtype, jnp.integer):
+        return ~keys
+    return -keys
+
+
+def _order_keys(keys: jax.Array, *, ascending: bool) -> jax.Array:
+    """Stable argsort along the last axis, either direction.
+
+    Descending stability (ties keep original order) sorts the reversed-order
+    key transform ascending.
+    """
+    if ascending:
+        return jnp.argsort(keys, axis=-1, stable=True)
+    return jnp.argsort(_rev_key(keys), axis=-1, stable=True)
+
+
+def _gather_last(v: jax.Array, order: jax.Array) -> jax.Array:
+    """Index ``v`` (shaped like keys + optional trailing dims) by ``order``."""
+    extra = v.ndim - order.ndim
+    idx = order.reshape(order.shape + (1,) * extra)
+    return jnp.take_along_axis(v, idx, axis=order.ndim - 1)
+
+
+# ------------------------------------------------------------- cluster path ---
+def cluster_kv_local(
+    local_keys: jax.Array,
+    local_values: Any,
+    axis_name: str,
+    *,
+    capacity: int,
+    partitioner,
+    n_buckets: int,
+    compress: bool = False,
+):
+    """shard_map body: exchange (key, value) records, stable-sort the slab.
+
+    Returns (sorted_keys (B/P*C,), sorted_values pytree, my_count, overflow).
+    Entries [0, my_count) are this shard's contiguous range of the global
+    stable sort; the tail is sentinel/zero padding.
+    """
+    P_ = jax.lax.axis_size(axis_name)
+    idx = jax.lax.axis_index(axis_name)
+    bucket = partitioner(local_keys).astype(jnp.int32)
+    ex = partition_exchange(
+        local_keys,
+        local_values,
+        bucket,
+        axis_name,
+        capacity=capacity,
+        n_buckets=n_buckets,
+        compress=compress,
+    )
+    flat_k = ex.recv_keys.reshape(-1)
+    # slab flat index = (sender, local bucket, slot): within one bucket this is
+    # global arrival order, so a stable sort here == the global stable sort.
+    order = jnp.argsort(flat_k, stable=True)
+    sorted_k = flat_k[order]
+    sorted_v = jax.tree.map(
+        lambda v: v.reshape((flat_k.shape[0],) + v.shape[2:])[order], ex.recv_values
+    )
+    global_counts = jax.lax.psum(ex.counts, axis_name)  # (n_buckets,)
+    owner = (jnp.arange(n_buckets, dtype=jnp.int32) * P_) // n_buckets
+    my_count = jnp.sum(jnp.where(owner == idx, global_counts, 0)).astype(jnp.int32)
+    return sorted_k, sorted_v, my_count[None], ex.overflow
+
+
+@lru_cache(maxsize=256)
+def _compiled_cluster_kv(
+    mesh, axis, mode, capacity, part_buckets, n_buckets, digits, lo, hi, compress
+):
+    """One jitted shard_map per static config (jit still specializes per
+    values-pytree structure internally) — repeat traffic never re-traces."""
+    part = make_partitioner(
+        mode, n_buckets=part_buckets, digits=digits, lo=lo, hi=hi, axis_name=axis
+    )
+    body = partial(
+        cluster_kv_local,
+        axis_name=axis,
+        capacity=capacity,
+        partitioner=part,
+        n_buckets=n_buckets,
+        compress=compress,
+    )
+    return jax.jit(
+        jax.shard_map(
+            body,
+            mesh=mesh,
+            in_specs=(P(axis), P(axis)),
+            out_specs=(P(axis), P(axis), P(axis), P()),
+        )
+    )
+
+
+def cluster_sort_kv(
+    keys: jax.Array,
+    values: Any,
+    mesh,
+    axis: str,
+    *,
+    mode: str = "splitters",
+    capacity_factor: float = 2.0,
+    digits: int = 3,
+    lo=0,
+    hi=1,
+    compress: bool = False,
+    max_retries: int = 4,
+):
+    """Distributed stable key–value sort (model D with a values payload).
+
+    Returns (slab_keys (P*C_total,), slab_values pytree, valid mask); shard
+    p's range of the globally sorted records sits in its slab prefix.  Retries
+    with doubled capacity on overflow, like ``cluster_sort``.
+    """
+    P_ = mesh.shape[axis]
+    n = keys.shape[-1]
+    if n % P_:
+        raise ValueError(f"n={n} must divide axis size {P_}")
+    m = n // P_
+    part_buckets, n_buckets, cap = slab_geometry(mode, m, P_, capacity_factor)
+
+    for _ in range(max_retries + 1):
+        fn = _compiled_cluster_kv(
+            mesh, axis, mode, cap, part_buckets, n_buckets, digits, lo, hi, compress
+        )
+        slab_k, slab_v, counts, overflow = fn(keys, values)
+        if not bool(overflow):
+            C_total = slab_k.shape[0] // P_
+            pos = jnp.arange(slab_k.shape[0]) % C_total
+            valid = pos < jnp.repeat(counts, C_total)
+            return slab_k, slab_v, valid
+        cap = min(m, cap * 2)
+    raise RuntimeError("cluster_sort_kv: capacity overflow persisted after retries")
+
+
+# ---------------------------------------------------------------- front API ---
+def sort_kv(
+    keys: jax.Array,
+    values: Any,
+    *,
+    mesh=None,
+    axis: Optional[str] = None,
+    ascending: bool = True,
+    compress: bool = False,
+    **cluster_kw,
+):
+    """Stable sort of ``keys`` carrying an arbitrary ``values`` pytree along.
+
+    Single device: any leading batch dims, sorts the last axis.  With
+    ``mesh=``/``axis=``: 1-D keys, model-D exchange of full records, returns
+    dense (n,)-shaped results (the slab is compacted eagerly).
+    """
+    if mesh is None:
+        order = _order_keys(keys, ascending=ascending)
+        return _gather_last(keys, order), jax.tree.map(
+            lambda v: _gather_last(v, order), values
+        )
+    if axis is None:
+        raise ValueError("sort_kv with mesh= requires axis=")
+    if not ascending:
+        # sort the order-reversed keys ascending so ties keep arrival order
+        # (a flip of the ascending result would reverse them); decimal/range
+        # bucketing assumes the untransformed key space.
+        if cluster_kw.get("mode", "splitters") != "splitters":
+            raise ValueError("descending distributed sort_kv needs mode='splitters'")
+        k, v = sort_kv(
+            _rev_key(keys), values, mesh=mesh, axis=axis, ascending=True,
+            compress=compress, **cluster_kw,
+        )
+        return _rev_key(k), v
+    slab_k, slab_v, valid = cluster_sort_kv(
+        keys, values, mesh, axis, compress=compress, **cluster_kw
+    )
+    return slab_k[valid], jax.tree.map(lambda a: a[valid], slab_v)
+
+
+def sort_pairs(keys: jax.Array, values: jax.Array, **kwargs):
+    """(keys, values) -> (sorted_keys, aligned_values) for a single payload
+    array — the record-sort convenience wrapper over ``sort_kv``."""
+    k, v = sort_kv(keys, {"v": values}, **kwargs)
+    return k, v["v"]
+
+
+def argsort(
+    keys: jax.Array,
+    *,
+    mesh=None,
+    axis: Optional[str] = None,
+    ascending: bool = True,
+    **cluster_kw,
+):
+    """Stable argsort (indices into the original array), matching
+    ``np.argsort(kind='stable')``. Distributed path carries the global index
+    as the exchange payload."""
+    if mesh is None:
+        return _order_keys(keys, ascending=ascending)
+    iota = jnp.arange(keys.shape[-1], dtype=jnp.int32)
+    _, idx = sort_pairs(
+        keys, iota, mesh=mesh, axis=axis, ascending=ascending, **cluster_kw
+    )
+    return idx
+
+
+def topk(x: jax.Array, k: int, *, largest: bool = True):
+    """Top-k (values, indices) along the last axis via the engine argsort.
+
+    Matches ``jax.lax.top_k`` tie behaviour (lowest index wins) because the
+    descending argsort is stable.
+    """
+    order = _order_keys(x, ascending=not largest)
+    top_idx = order[..., :k]
+    return jnp.take_along_axis(x, top_idx, axis=-1), top_idx

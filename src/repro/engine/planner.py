@@ -1,0 +1,261 @@
+"""Autotuned sort planning — measure the paper's crossover instead of guessing.
+
+The paper's empirical core: which hybrid wins is workload-dependent ("Hybrid
+Quicksort and Merge sort outperformed [the cluster model] ... when sorting
+small size data, but with larger data the speedup of [the cluster model]
+becomes bigger").  A ``SortPlan`` pins one concrete execution recipe
+(strategy, local sort impl, thread count, capacity factor, partitioner mode);
+``autotune`` microbenchmarks every candidate for a (size-bucket, dtype, mesh
+fingerprint) cell and persists the winner to a JSON plan cache so serving
+processes start with tuned choices.
+
+Plan-cache file format (versioned, human-editable)::
+
+    {"version": 1,
+     "plans": {"<size_bucket>|<dtype>|<mesh_fp>": {"strategy": "shared", ...}}}
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from dataclasses import asdict, dataclass, replace
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bitonic import next_pow2
+from repro.core.cluster_sort import cluster_sort
+from repro.core.distributed_sort import distributed_merge_sort
+from repro.core.seqsort import LOCAL_SORTS
+from repro.core.shared_sort import shared_memory_sort
+
+__all__ = [
+    "SortPlan",
+    "Planner",
+    "default_planner",
+    "mesh_fingerprint",
+    "plan_key",
+    "plan_from_strategy",
+    "run_plan",
+    "autotune",
+]
+
+_PLAN_VERSION = 1
+
+# strategy names: 'shared' covers paper models A/B (A = local_impl='merge',
+# B = local_impl='xla'/'bitonic'); C and D keep their api.py names.
+_PLAN_STRATEGIES = ("shared", "distributed_merge", "cluster")
+
+
+@dataclass(frozen=True)
+class SortPlan:
+    """One executable sort recipe; ``us_per_call`` records the tuned timing."""
+
+    strategy: str = "shared"
+    local_impl: str = "xla"
+    n_threads: int = 8
+    capacity_factor: float = 2.0
+    mode: str = "splitters"
+    us_per_call: float = -1.0
+
+    def to_dict(self) -> dict:
+        return asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "SortPlan":
+        known = {k: d[k] for k in cls.__dataclass_fields__ if k in d}
+        return cls(**known)
+
+
+def mesh_fingerprint(mesh=None) -> str:
+    """Stable id for the hardware layout a plan was tuned on."""
+    if mesh is None:
+        dev = jax.devices()[0]
+        return f"local/{dev.platform}"
+    axes = ",".join(f"{name}={size}" for name, size in mesh.shape.items())
+    return f"{mesh.devices.flat[0].platform}/{axes}"
+
+
+def plan_key(n: int, dtype, mesh=None) -> str:
+    """(size-bucket, dtype, mesh fingerprint) -> plan-cache key."""
+    return f"{next_pow2(n)}|{jnp.dtype(dtype).name}|{mesh_fingerprint(mesh)}"
+
+
+def plan_from_strategy(strategy: str, *, n_threads: int = 8) -> SortPlan:
+    """Map the public api.py strategy names onto plans (back-compat)."""
+    table = {
+        "shared_merge": SortPlan("shared", local_impl="merge", n_threads=n_threads),
+        "shared_hybrid": SortPlan("shared", local_impl="xla", n_threads=n_threads),
+        "distributed_merge": SortPlan("distributed_merge"),
+        "cluster": SortPlan("cluster"),
+    }
+    if strategy not in table:
+        raise ValueError(f"strategy must be one of {tuple(table)}")
+    return table[strategy]
+
+
+def default_plan(mesh=None) -> SortPlan:
+    """The pre-autotune rule (what api.sort hard-coded before the engine)."""
+    return SortPlan("cluster") if mesh is not None else SortPlan("shared")
+
+
+def run_plan(
+    plan: SortPlan,
+    x: jax.Array,
+    *,
+    mesh=None,
+    axis: Optional[str] = None,
+    ascending: bool = True,
+    **kwargs,
+):
+    """Execute a plan. Cluster plans return (slab, valid) like cluster_sort."""
+    if not ascending and plan.strategy == "cluster":
+        raise ValueError(
+            "the cluster strategy sorts ascending only; for descending "
+            "distributed sorts use repro.engine.sort_kv(ascending=False)"
+        )
+    if plan.strategy == "shared":
+        return shared_memory_sort(
+            x, n_threads=plan.n_threads, local_impl=plan.local_impl, ascending=ascending
+        )
+    if mesh is None or axis is None:
+        raise ValueError(f"plan strategy {plan.strategy!r} requires mesh= and axis=")
+    if plan.strategy == "distributed_merge":
+        kwargs.setdefault("local_impl", plan.local_impl)
+        out = distributed_merge_sort(x, mesh, axis, **kwargs)
+        return out if ascending else jnp.flip(out, -1)
+    if plan.strategy == "cluster":
+        kwargs.setdefault("local_impl", plan.local_impl)
+        kwargs.setdefault("mode", plan.mode)
+        kwargs.setdefault("capacity_factor", plan.capacity_factor)
+        return cluster_sort(x, mesh, axis, **kwargs)
+    raise ValueError(f"unknown plan strategy {plan.strategy!r}")
+
+
+def _time_plan(plan, x, mesh, axis, *, reps: int, **kwargs) -> float:
+    out = run_plan(plan, x, mesh=mesh, axis=axis, **kwargs)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = run_plan(plan, x, mesh=mesh, axis=axis, **kwargs)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def candidate_plans(mesh=None, *, quick: bool = False):
+    """The tuning grid: strategies x local_impl (x capacity for model D)."""
+    impls = ("xla", "merge") if quick else LOCAL_SORTS
+    cands = [SortPlan("shared", local_impl=i) for i in impls]
+    if mesh is not None:
+        cands += [SortPlan("distributed_merge", local_impl="xla")]
+        cfs = (2.0,) if quick else (1.5, 2.0)
+        cands += [
+            SortPlan("cluster", local_impl="xla", capacity_factor=cf, mode="splitters")
+            for cf in cfs
+        ]
+    return cands
+
+
+class Planner:
+    """Plan table: lookup tuned plans, autotune missing cells, persist JSON."""
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = path
+        self.plans: Dict[str, SortPlan] = {}
+        if path and os.path.exists(path):
+            self.load(path)
+
+    # ------------------------------------------------------------ storage ---
+    def load(self, path: str) -> "Planner":
+        with open(path) as f:
+            doc = json.load(f)
+        if doc.get("version") != _PLAN_VERSION:
+            raise ValueError(f"plan cache version {doc.get('version')} unsupported")
+        self.plans = {k: SortPlan.from_dict(v) for k, v in doc["plans"].items()}
+        return self
+
+    def save(self, path: Optional[str] = None) -> str:
+        path = path or self.path
+        if path is None:
+            raise ValueError("no path given and Planner has no default path")
+        doc = {
+            "version": _PLAN_VERSION,
+            "plans": {k: p.to_dict() for k, p in sorted(self.plans.items())},
+        }
+        tmp = f"{path}.tmp"
+        os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+        with open(tmp, "w") as f:
+            json.dump(doc, f, indent=1)
+        os.replace(tmp, path)
+        self.path = self.path or path
+        return path
+
+    # ------------------------------------------------------------- lookup ---
+    def lookup(self, n: int, dtype, mesh=None) -> Optional[SortPlan]:
+        return self.plans.get(plan_key(n, dtype, mesh))
+
+    def plan_for(self, n: int, dtype, mesh=None) -> SortPlan:
+        """Tuned plan if one exists, else the pre-engine default rule."""
+        return self.lookup(n, dtype, mesh) or default_plan(mesh)
+
+    # ----------------------------------------------------------- autotune ---
+    def autotune(
+        self,
+        n: int,
+        dtype=jnp.int32,
+        *,
+        mesh=None,
+        axis: Optional[str] = None,
+        reps: int = 3,
+        quick: bool = False,
+        seed: int = 0,
+        save: bool = True,
+        **kwargs,
+    ) -> SortPlan:
+        """Microbenchmark every candidate on synthetic keys; persist winner.
+
+        Timed at the size bucket (next pow2 of ``n``) so every n in the bucket
+        shares the plan — the same bucketing the compiled-executable cache
+        uses, keeping plan granularity == compilation granularity.
+        """
+        import numpy as np
+
+        nb = next_pow2(n)
+        x = jnp.asarray(
+            np.random.default_rng(seed).integers(100, 1000, size=nb).astype("int64"),
+            jnp.dtype(dtype),
+        )
+        if mesh is not None:
+            P_ = mesh.shape[axis]
+            if nb % P_:
+                raise ValueError(
+                    f"axis size {P_} must divide the size bucket {nb}"
+                )
+        best = None
+        for cand in candidate_plans(mesh, quick=quick):
+            us = _time_plan(cand, x, mesh, axis, reps=reps, **kwargs)
+            cand = replace(cand, us_per_call=round(us, 2))
+            if best is None or cand.us_per_call < best.us_per_call:
+                best = cand
+        self.plans[plan_key(nb, dtype, mesh)] = best
+        if save and self.path:
+            self.save()
+        return best
+
+
+_DEFAULT: Optional[Planner] = None
+
+
+def default_planner() -> Planner:
+    """Process-wide planner; honours $REPRO_SORT_PLANS as its backing file."""
+    global _DEFAULT
+    if _DEFAULT is None:
+        _DEFAULT = Planner(os.environ.get("REPRO_SORT_PLANS"))
+    return _DEFAULT
+
+
+def autotune(n: int, dtype=jnp.int32, **kwargs) -> SortPlan:
+    """Module-level convenience: autotune into the default planner."""
+    return default_planner().autotune(n, dtype, **kwargs)

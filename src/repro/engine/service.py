@@ -1,0 +1,185 @@
+"""Batched sort front door: ragged requests in, one vmapped sort per bucket.
+
+``SortService.submit`` accepts a ragged batch of 1-D requests, groups them by
+(length bucket, dtype), pads each group to a (pow2 batch, pow2 length) block
+in numpy, and runs one ahead-of-time compiled executable per block shape from
+the ``CompiledCache``.  All padding/slicing stays in numpy so the steady-state
+hot path performs **zero** jax tracing/lowering — the property the engine
+tests assert with jax's compilation counters.
+
+Plans come from the ``Planner``: the per-bucket local sort recipe is the
+tuned shared-memory plan for that (bucket, dtype) cell (a serving front door
+is a single-host component; cluster plans apply to the mesh path in kv.py).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.shared_sort import shared_memory_sort
+from .cache import CompiledCache, size_bucket
+from .kv import _gather_last, _order_keys
+from .planner import Planner, SortPlan, default_planner
+
+__all__ = ["SortService", "ServiceStats"]
+
+_KINDS = ("sort", "argsort", "sort_kv")
+
+
+@dataclass
+class ServiceStats:
+    requests: int = 0
+    batches: int = 0
+    keys_in: int = 0
+    padded_keys: int = 0
+    elapsed_s: float = 0.0
+    compiles: int = 0
+    cache_hits: int = 0
+
+    def throughput_keys_per_s(self) -> float:
+        return self.keys_in / self.elapsed_s if self.elapsed_s else 0.0
+
+
+def _np_sentinel(dtype: np.dtype, *, largest: bool):
+    if np.issubdtype(dtype, np.floating):
+        return np.inf if largest else -np.inf
+    info = np.iinfo(dtype)
+    return info.max if largest else info.min
+
+
+class SortService:
+    """Shape-bucketed, plan-driven batch sorter with recompile accounting."""
+
+    def __init__(
+        self,
+        *,
+        planner: Optional[Planner] = None,
+        min_bucket: int = 8,
+    ):
+        self.planner = planner or default_planner()
+        self.min_bucket = min_bucket
+        self.cache = CompiledCache()
+        self.stats = ServiceStats()
+
+    # ------------------------------------------------------------ builders ---
+    def _builder(self, kind: str, plan: SortPlan, ascending: bool):
+        if kind == "sort":
+            def build():
+                return lambda xb: shared_memory_sort(
+                    xb,
+                    n_threads=plan.n_threads,
+                    local_impl=plan.local_impl,
+                    ascending=ascending,
+                )
+        elif kind == "argsort":
+            def build():
+                return lambda xb: _order_keys(xb, ascending=ascending)
+        else:  # sort_kv
+            def build():
+                def f(xb, vb):
+                    order = _order_keys(xb, ascending=ascending)
+                    return _gather_last(xb, order), _gather_last(vb, order)
+                return f
+        return build
+
+    # -------------------------------------------------------------- submit ---
+    def submit(
+        self,
+        requests: Sequence[np.ndarray],
+        *,
+        kind: str = "sort",
+        values: Optional[Sequence[np.ndarray]] = None,
+        ascending: bool = True,
+    ) -> List[Any]:
+        """Sort a ragged batch. Returns per-request numpy results, in order.
+
+        kind='sort'    -> sorted keys
+        kind='argsort' -> stable argsort indices
+        kind='sort_kv' -> (sorted keys, aligned values); ``values[i]`` must
+                          share ``requests[i]``'s length (extra trailing dims ok)
+        """
+        if kind not in _KINDS:
+            raise ValueError(f"kind must be one of {_KINDS}")
+        if (values is not None) != (kind == "sort_kv"):
+            raise ValueError("values= is required iff kind='sort_kv'")
+        t0 = time.perf_counter()
+        reqs = [np.asarray(r) for r in requests]
+        vals = None
+        for i, r in enumerate(reqs):
+            if r.ndim != 1:
+                raise ValueError("requests must be 1-D arrays")
+            if np.issubdtype(r.dtype, np.floating) and np.isnan(r).any():
+                # NaN sorts after the padding sentinel, which would leak
+                # padding values (or out-of-range argsort indices) into results
+                raise ValueError(f"request {i} contains NaN keys (unsupported)")
+        if kind == "sort_kv":
+            vals = [np.asarray(v) for v in values]
+            if len(vals) != len(reqs):
+                raise ValueError("need exactly one values array per request")
+            for i, (r, v) in enumerate(zip(reqs, vals)):
+                if v.shape[:1] != r.shape:
+                    raise ValueError(f"values[{i}] length must match request {i}")
+
+        # group request indices by (length bucket, dtype) — plus the value
+        # signature for sort_kv, so unrelated payload shapes never collide
+        groups: Dict[tuple, List[int]] = {}
+        for i, r in enumerate(reqs):
+            gk = (size_bucket(len(r), min_bucket=self.min_bucket), r.dtype.name)
+            if vals is not None:
+                gk += (vals[i].shape[1:], vals[i].dtype.name)
+            groups.setdefault(gk, []).append(i)
+
+        out: List[Any] = [None] * len(reqs)
+        for gk, idxs in sorted(groups.items(), key=lambda kv: repr(kv[0])):
+            bucket, dtype_name = gk[0], gk[1]
+            dtype = np.dtype(dtype_name)
+            bb = size_bucket(len(idxs), min_bucket=1)  # pow2 batch bucket
+            sent = _np_sentinel(dtype, largest=ascending)
+            batch = np.full((bb, bucket), sent, dtype)
+            for row, i in enumerate(idxs):
+                batch[row, : len(reqs[i])] = reqs[i]
+
+            plan = self.planner.plan_for(bucket, dtype)
+            if plan.strategy != "shared":  # front door is single-host
+                plan = SortPlan("shared")
+            key = (kind, bucket, bb, dtype_name, ascending,
+                   plan.local_impl, plan.n_threads)
+            args = [jax.ShapeDtypeStruct((bb, bucket), jnp.dtype(dtype))]
+
+            if kind == "sort_kv":
+                vshape, vdtype = gk[2], np.dtype(gk[3])
+                vbatch = np.zeros((bb, bucket) + vshape, vdtype)
+                for row, i in enumerate(idxs):
+                    vbatch[row, : len(vals[i])] = vals[i]
+                key = key + (vshape, vdtype.name)
+                args.append(jax.ShapeDtypeStruct((bb, bucket) + vshape, jnp.dtype(vdtype)))
+
+            before = self.cache.misses
+            exe = self.cache.get_or_build(key, self._builder(kind, plan, ascending), args)
+            self.stats.compiles += self.cache.misses - before
+            self.stats.cache_hits += int(self.cache.misses == before)
+            self.stats.batches += 1
+            self.stats.padded_keys += bb * bucket - sum(len(reqs[i]) for i in idxs)
+
+            if kind == "sort_kv":
+                ks, vres = exe(batch, vbatch)
+                ks, vres = np.asarray(ks), np.asarray(vres)
+                for row, i in enumerate(idxs):
+                    n = len(reqs[i])
+                    out[i] = (ks[row, :n], vres[row, :n])
+            else:
+                res = np.asarray(exe(batch))
+                for row, i in enumerate(idxs):
+                    # sentinel padding sorts last either direction, so the
+                    # leading n entries (indices < n for argsort) are the answer
+                    out[i] = res[row, : len(reqs[i])]
+
+        self.stats.requests += len(reqs)
+        self.stats.keys_in += sum(len(r) for r in reqs)
+        self.stats.elapsed_s += time.perf_counter() - t0
+        return out

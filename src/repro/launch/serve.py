@@ -1,8 +1,8 @@
 """Batched serving driver: prefill a prompt batch, decode N tokens.
 
 Greedy/temperature sampling over the vocab-parallel logits; the decode loop
-uses the serving top-k built on the paper's bitonic network
-(core.bitonic.bitonic_topk) — the serving-path integration from DESIGN.md §3.
+uses the serving top-k from the sort engine (repro.engine.topk, a stable
+descending argsort) — the serving-path integration from DESIGN.md §3.
 
 Usage:
   python -m repro.launch.serve --arch qwen3-0.6b --reduced --batch 4 \
@@ -18,16 +18,17 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ARCHS, reduced
-from repro.core.bitonic import bitonic_topk
+from repro.engine import topk
 from repro.models.transformer import ShardCtx, model_init
 from repro.train.steps import prefill_step, serve_decode_step
 
 
 def sample_next(logits: jax.Array, key, *, temperature: float, top_k: int):
-    """(B, V) logits -> (B,) token ids. top_k via the bitonic network."""
+    """(B, V) logits -> (B,) token ids. top_k via the engine's stable argsort
+    (same tie behaviour as lax.top_k; the serving-path integration)."""
     if temperature <= 0:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    vals, idx = bitonic_topk(logits, top_k)
+    vals, idx = topk(logits, top_k)
     probs = jax.nn.softmax(vals / temperature, axis=-1)
     choice = jax.random.categorical(key, jnp.log(jnp.maximum(probs, 1e-20)))
     return jnp.take_along_axis(idx, choice[:, None], axis=1)[:, 0].astype(jnp.int32)

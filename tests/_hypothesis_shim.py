@@ -1,0 +1,83 @@
+"""Minimal stand-in for ``hypothesis`` when it isn't installed.
+
+Covers exactly the subset the test suite uses — ``given``, ``settings``
+profiles, and the ``integers`` / ``floats`` / ``lists`` strategies — by
+drawing a fixed-seed pseudo-random example set per test (first example is
+the minimal one, so size/empty edge cases are always exercised).  With
+``hypothesis`` installed (see requirements-dev.txt) the real library is
+used instead; this shim only keeps collection green in bare containers.
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+
+class _Strategy:
+    def __init__(self, draw, minimal):
+        self._draw = draw
+        self._minimal = minimal
+
+    def draw(self, rng):
+        return self._draw(rng)
+
+    def minimal(self):
+        return self._minimal()
+
+
+class strategies:
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(
+            lambda rng: int(rng.integers(min_value, max_value + 1)),
+            lambda: int(min_value),
+        )
+
+    @staticmethod
+    def floats(min_value, max_value, allow_nan=False, width=64):
+        cast = np.float32 if width == 32 else np.float64
+        return _Strategy(
+            lambda rng: float(cast(rng.uniform(min_value, max_value))),
+            lambda: float(cast(min_value)),
+        )
+
+    @staticmethod
+    def lists(elements, *, min_size=0, max_size=10):
+        return _Strategy(
+            lambda rng: [
+                elements.draw(rng)
+                for _ in range(int(rng.integers(min_size, max_size + 1)))
+            ],
+            lambda: [elements.minimal() for _ in range(min_size)],
+        )
+
+
+class settings:
+    _profiles = {"default": {"max_examples": 25}}
+    _active = "default"
+
+    @classmethod
+    def register_profile(cls, name, **kwargs):
+        cls._profiles[name] = kwargs
+
+    @classmethod
+    def load_profile(cls, name):
+        cls._active = name
+
+
+def given(*strats):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = settings._profiles[settings._active].get("max_examples", 25)
+            rng = np.random.default_rng(1234)
+            fn(*args, *[s.minimal() for s in strats], **kwargs)
+            for _ in range(max(0, n - 1)):
+                fn(*args, *[s.draw(rng) for s in strats], **kwargs)
+
+        # pytest must not see the drawn params as fixtures via __wrapped__
+        del wrapper.__wrapped__
+        return wrapper
+
+    return deco

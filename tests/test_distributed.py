@@ -1,28 +1,6 @@
 """Multi-device tests (8 host devices via subprocess — keeps the main test
 process at 1 device, per the dry-run isolation rule)."""
-import os
-import subprocess
-import sys
-import textwrap
-
-import pytest
-
-REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-
-
-def run_with_devices(code: str, n: int = 8) -> str:
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n}"
-    env["PYTHONPATH"] = os.path.join(REPO, "src")
-    out = subprocess.run(
-        [sys.executable, "-c", textwrap.dedent(code)],
-        env=env,
-        capture_output=True,
-        text=True,
-        timeout=600,
-    )
-    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
-    return out.stdout
+from conftest import run_with_devices
 
 
 def test_distributed_merge_sort_model_c():
@@ -109,6 +87,32 @@ def test_bucketed_exchange_grouping():
                     got = got[got != sent]
                     assert (np.sort(got) == np.sort(want)).all()
         print("bucketed ok")
+    """)
+
+
+def test_cluster_decimal_bucket_rounding_and_capacity():
+    """Model-D regression: decimal mode has 10 buckets, which must be rounded
+    up to a multiple of the axis size for the exchange, with capacity sized
+    per *bucket* (not per shard)."""
+    from repro.core.cluster_sort import slab_geometry
+
+    for P_ in (1, 2, 3, 4, 7, 8, 16):
+        part, B, cap = slab_geometry("decimal", 1000, P_, 2.0)
+        assert part == 10 and B >= 10 and B % P_ == 0, P_
+        assert cap == 200  # ceil(2.0 * 1000 / 10) — per bucket
+    assert slab_geometry("splitters", 1000, 8, 1.5) == (8, 8, 188)
+
+    run_with_devices("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core import cluster_sort
+        mesh = jax.make_mesh((8,), ("x",))   # 8 does not divide 10
+        rng = np.random.default_rng(7)
+        x = rng.integers(100, 1000, size=8000).astype(np.int32)
+        slab, valid = cluster_sort(jnp.asarray(x), mesh, "x", mode="decimal",
+                                   digits=3, capacity_factor=1.2)
+        got = np.asarray(slab)[np.asarray(valid)]
+        assert (got == np.sort(x)).all()
+        print("decimal rounding ok")
     """)
 
 

@@ -1,0 +1,215 @@
+"""repro.engine: autotuned plans, compiled-plan cache, key-value sorting."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from conftest import run_with_devices
+from repro.engine import (
+    Planner,
+    SortPlan,
+    SortService,
+    argsort,
+    plan_key,
+    size_bucket,
+    sort_kv,
+    sort_pairs,
+    topk,
+)
+
+RNG = np.random.default_rng(0)
+
+
+def _key_cases(n, rng):
+    base = rng.integers(100, 1000, n).astype(np.int32)
+    return {
+        "random": base,
+        "sorted": np.sort(base),
+        "reverse": np.sort(base)[::-1].copy(),
+        "duplicate_heavy": rng.integers(0, 7, n).astype(np.int32),
+    }
+
+
+# ----------------------------------------------------------------- planner ---
+def test_autotune_selects_and_persists_plan(tmp_path):
+    path = str(tmp_path / "plans.json")
+    planner = Planner(path)
+    plan = planner.autotune(3000, jnp.int32, quick=True, reps=1)
+    assert plan.strategy == "shared"
+    assert plan.us_per_call > 0
+    # persisted: a fresh planner reloads the same plan, bucketed by pow2 size
+    reloaded = Planner(path)
+    assert reloaded.lookup(3000, jnp.int32) == plan
+    assert reloaded.lookup(4096, jnp.int32) == plan  # same 4096 bucket
+    assert reloaded.lookup(5000, jnp.int32) is None  # 8192 bucket untuned
+    assert reloaded.plan_for(5000, jnp.int32).strategy == "shared"  # default rule
+
+
+def test_plan_key_separates_dtype_and_bucket():
+    assert plan_key(3000, jnp.int32) == plan_key(4096, jnp.int32)
+    assert plan_key(3000, jnp.int32) != plan_key(3000, jnp.float32)
+    assert plan_key(4096, jnp.int32) != plan_key(4097, jnp.int32)
+
+
+def test_api_sort_honours_strategy_and_plan_overrides():
+    from repro.core import sort
+
+    x = jnp.asarray(RNG.integers(100, 1000, 2048).astype(np.int32))
+    want = np.sort(np.asarray(x))
+    for strategy in ("shared_merge", "shared_hybrid"):
+        assert (np.asarray(sort(x, strategy=strategy)) == want).all()
+    assert (np.asarray(sort(x, plan=SortPlan("shared", local_impl="bitonic"))) == want).all()
+    assert (np.asarray(sort(x)) == want).all()  # planner default path
+    with pytest.raises(ValueError):
+        sort(x, strategy="nope")
+    with pytest.raises(ValueError):
+        sort(x, strategy="cluster")  # needs mesh= and axis=
+    with pytest.raises(ValueError, match="ascending"):
+        sort(x, strategy="cluster", ascending=False)  # cluster is ascending-only
+
+
+# ------------------------------------------------------------------ kv API ---
+def test_sort_kv_and_argsort_match_numpy_single_device():
+    for name, k in _key_cases(2000, np.random.default_rng(1)).items():
+        v = np.arange(len(k), dtype=np.int32)
+        ref = np.argsort(k, kind="stable")
+        sk, sv = sort_pairs(jnp.asarray(k), jnp.asarray(v))
+        assert (np.asarray(sk) == k[ref]).all(), name
+        assert (np.asarray(sv) == ref).all(), name
+        assert (np.asarray(argsort(jnp.asarray(k))) == ref).all(), name
+        # descending stable: ties keep original order
+        refd = np.argsort(-k.astype(np.int64), kind="stable")
+        assert (np.asarray(argsort(jnp.asarray(k), ascending=False)) == refd).all(), name
+
+
+def test_sort_kv_pytree_and_batched():
+    rng = np.random.default_rng(2)
+    k = rng.standard_normal((3, 100)).astype(np.float32)
+    v = {"a": rng.standard_normal((3, 100, 4)).astype(np.float32)}
+    sk, sv = sort_kv(jnp.asarray(k), jax.tree.map(jnp.asarray, v))
+    order = np.argsort(k, axis=-1, kind="stable")
+    assert np.allclose(np.asarray(sk), np.take_along_axis(k, order, -1))
+    assert np.allclose(
+        np.asarray(sv["a"]),
+        np.take_along_axis(v["a"], order[..., None], 1),
+    )
+
+
+def test_topk_matches_lax_top_k():
+    x = RNG.standard_normal((5, 64)).astype(np.float32)
+    x[:, 10] = x[:, 20]  # force ties
+    vals, idx = topk(jnp.asarray(x), 8)
+    lv, li = jax.lax.top_k(jnp.asarray(x), 8)
+    assert np.allclose(np.asarray(vals), np.asarray(lv))
+    assert (np.asarray(idx) == np.asarray(li)).all()
+
+
+def test_sort_kv_argsort_cluster_matches_numpy_reference():
+    """Acceptance: engine kv ops == np.argsort references on a multi-device
+    CPU mesh, for random / sorted / reverse / duplicate-heavy inputs."""
+    run_with_devices("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.engine import sort_kv, sort_pairs, argsort
+        mesh = jax.make_mesh((8,), ("x",))
+        rng = np.random.default_rng(0)
+        n = 4096
+        base = rng.integers(100, 1000, n).astype(np.int32)
+        cases = {
+            "random": base,
+            "sorted": np.sort(base),
+            "reverse": np.sort(base)[::-1].copy(),
+            "duplicate_heavy": rng.integers(0, 7, n).astype(np.int32),
+        }
+        for name, k in cases.items():
+            v = rng.standard_normal((n, 3)).astype(np.float32)
+            ref = np.argsort(k, kind="stable")
+            sk, sv = sort_pairs(jnp.asarray(k), jnp.asarray(v), mesh=mesh, axis="x")
+            assert (np.asarray(sk) == k[ref]).all(), name
+            assert (np.asarray(sv) == v[ref]).all(), name
+            idx = argsort(jnp.asarray(k), mesh=mesh, axis="x")
+            assert (np.asarray(idx) == ref).all(), name
+            # descending must also be stable (ties keep arrival order)
+            refd = np.argsort(~k, kind="stable")
+            idxd = argsort(jnp.asarray(k), mesh=mesh, axis="x", ascending=False)
+            assert (np.asarray(idxd) == refd).all(), name
+        # pytree payload + int8 wire compression: float leaves quantized
+        # (close), integer leaves must travel uncompressed (exact)
+        k = cases["random"]
+        vals = {"f": rng.standard_normal((n, 4)).astype(np.float32) * 3,
+                "i": np.arange(n, dtype=np.int32)}
+        ref = np.argsort(k, kind="stable")
+        sk, sv = sort_kv(jnp.asarray(k), jax.tree.map(jnp.asarray, vals),
+                         mesh=mesh, axis="x", compress=True)
+        assert (np.asarray(sk) == k[ref]).all()
+        assert (np.asarray(sv["i"]) == ref).all(), "int payloads must be exact"
+        rel = np.abs(np.asarray(sv["f"]) - vals["f"][ref]).max() / np.abs(vals["f"]).max()
+        assert rel < 0.02, rel
+        print("cluster kv ok")
+    """)
+
+
+# ----------------------------------------------------------------- service ---
+def test_service_zero_recompiles_for_same_bucket_traffic():
+    """Acceptance: a second submit with same-bucket shapes performs zero new
+    compilations — asserted with jax's lowering counter, not just ours."""
+    from jax._src import test_util as jtu
+
+    rng = np.random.default_rng(3)
+    svc = SortService()
+    first = [rng.integers(0, 1000, n).astype(np.int32) for n in (1000, 800, 500)]
+    out = svc.submit(first)
+    for r, o in zip(first, out):
+        assert (o == np.sort(r)).all()
+    compiles_after_first = svc.cache.misses
+    assert compiles_after_first == 2  # one executable per (1024, 512) bucket
+
+    second = [rng.integers(0, 1000, n).astype(np.int32) for n in (900, 700, 400)]
+    with jtu.count_jit_and_pmap_lowerings() as count:
+        out2 = svc.submit(second)
+    assert count[0] == 0, "serving hot path must not re-trace"
+    assert svc.cache.misses == compiles_after_first
+    for r, o in zip(second, out2):
+        assert (o == np.sort(r)).all()
+    assert svc.stats.requests == 6 and svc.stats.throughput_keys_per_s() > 0
+
+
+def test_service_kinds_and_stats():
+    rng = np.random.default_rng(4)
+    svc = SortService()
+    reqs = [rng.integers(0, 100, n).astype(np.int32) for n in (300, 200)]
+    vals = [rng.standard_normal((len(r), 2)).astype(np.float32) for r in reqs]
+    for r, o in zip(reqs, svc.submit(reqs, kind="argsort")):
+        assert (o == np.argsort(r, kind="stable")).all()
+    for r, o in zip(reqs, svc.submit(reqs, kind="sort", ascending=False)):
+        assert (o == np.sort(r)[::-1]).all()
+    for r, v, (sk, sv) in zip(reqs, vals, svc.submit(reqs, kind="sort_kv", values=vals)):
+        ref = np.argsort(r, kind="stable")
+        assert (sk == r[ref]).all() and (sv == v[ref]).all()
+    assert svc.stats.batches >= 3
+    with pytest.raises(ValueError):
+        svc.submit(reqs, kind="sort_kv")  # missing values
+    with pytest.raises(ValueError):
+        svc.submit([np.zeros((2, 2), np.int32)])  # not 1-D
+    with pytest.raises(ValueError, match="NaN"):
+        svc.submit([np.array([1.0, np.nan], np.float32)])
+
+
+def test_service_sort_kv_mixed_value_shapes_same_bucket():
+    """Requests whose keys share a length bucket but carry different payload
+    shapes must group separately, not error."""
+    rng = np.random.default_rng(5)
+    svc = SortService()
+    reqs = [rng.integers(0, 100, n).astype(np.int32) for n in (900, 1000)]
+    vals = [
+        rng.standard_normal((900, 2)).astype(np.float32),
+        rng.standard_normal((1000, 4)).astype(np.float32),
+    ]
+    for r, v, (sk, sv) in zip(reqs, vals, svc.submit(reqs, kind="sort_kv", values=vals)):
+        ref = np.argsort(r, kind="stable")
+        assert (sk == r[ref]).all() and (sv == v[ref]).all()
+
+
+def test_size_bucket_pow2():
+    assert size_bucket(1000) == 1024
+    assert size_bucket(1024) == 1024
+    assert size_bucket(3, min_bucket=8) == 8

@@ -12,9 +12,6 @@ from repro.models.moe import (
     router_probs,
 )
 
-KEY = jax.random.PRNGKey(0)
-
-
 def dense_reference(p, cfg, x):
     """Compute the exact MoE output without any dispatch machinery."""
     probs, top_idx, top_gate, _ = router_probs(p, cfg, x)
@@ -36,9 +33,9 @@ def dense_reference(p, cfg, x):
     return out
 
 
-def test_single_device_moe_matches_dense_reference():
+def test_single_device_moe_matches_dense_reference(key):
     cfg = MoEConfig(d_model=16, d_ff=8, n_experts=4, top_k=2, capacity_factor=8.0)
-    p = moe_init(KEY, cfg, jnp.float32, ep_shards=1)
+    p = moe_init(key, cfg, jnp.float32, ep_shards=1)
     x = jax.random.normal(jax.random.PRNGKey(1), (24, 16))
     y, aux, overflow = moe_apply_ep_replicated(p, cfg, x)
     ref = dense_reference(p, cfg, x)
@@ -47,11 +44,11 @@ def test_single_device_moe_matches_dense_reference():
     assert float(aux) > 0
 
 
-def test_capacity_overflow_signal_and_drop():
+def test_capacity_overflow_signal_and_drop(key):
     """cf tiny -> tokens drop (output changes), overflow flag raised."""
     cfg_big = MoEConfig(d_model=16, d_ff=8, n_experts=4, top_k=2, capacity_factor=8.0)
     cfg_tiny = cfg_big._replace(capacity_factor=0.01)
-    p = moe_init(KEY, cfg_big, jnp.float32, ep_shards=1)
+    p = moe_init(key, cfg_big, jnp.float32, ep_shards=1)
     x = jax.random.normal(jax.random.PRNGKey(2), (32, 16))
     y_full, _, ovf_full = moe_apply_ep_replicated(p, cfg_big, x)
     y_drop, _, ovf_drop = moe_apply_ep_replicated(p, cfg_tiny, x)
@@ -60,10 +57,10 @@ def test_capacity_overflow_signal_and_drop():
     assert not np.allclose(np.asarray(y_full), np.asarray(y_drop))
 
 
-def test_router_masks_padding_experts():
+def test_router_masks_padding_experts(key):
     """ep_shards=4 with 5 real experts -> table padded to 8; dummies unreachable."""
     cfg = MoEConfig(d_model=16, d_ff=8, n_experts=5, top_k=2)
-    p = moe_init(KEY, cfg, jnp.float32, ep_shards=4)
+    p = moe_init(key, cfg, jnp.float32, ep_shards=4)
     assert p["w_in"].shape[0] == 8
     x = jax.random.normal(jax.random.PRNGKey(3), (64, 16))
     probs, top_idx, _, _ = router_probs(p, cfg, x)
@@ -71,9 +68,9 @@ def test_router_masks_padding_experts():
     assert np.allclose(np.asarray(probs[:, 5:]), 0.0)
 
 
-def test_aux_loss_favours_balance():
+def test_aux_loss_favours_balance(key):
     cfg = MoEConfig(d_model=8, d_ff=4, n_experts=4, top_k=1)
-    p = moe_init(KEY, cfg, jnp.float32, ep_shards=1)
+    p = moe_init(key, cfg, jnp.float32, ep_shards=1)
     x = jax.random.normal(jax.random.PRNGKey(4), (256, 8))
     _, _, _, aux_random = router_probs(p, cfg, x)
     # collapse the router to always pick expert 0 -> aux should rise

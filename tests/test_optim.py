@@ -5,7 +5,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # bare container — requirements-dev.txt installs the real one
+    from _hypothesis_shim import given, settings, strategies as st
 
 from repro.models.transformer import ModelConfig, model_init
 from repro.optim.adamw import (

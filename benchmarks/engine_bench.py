@@ -1,11 +1,14 @@
 """Engine benchmark: reproduce the paper's crossover curve, tuned vs default.
 
-Sweeps data sizes over the four strategies on a forced multi-device host
-mesh, autotunes a plan per size bucket, and reports what the tuned plan buys
-over the pre-engine default rule ("cluster if mesh else shared_hybrid").
-The paper's finding this automates: the shared hybrid wins small sizes, the
-cluster MSD-radix model wins large ones — where the crossover sits depends
-on the machine, which is exactly why it's measured, not hard-coded.
+Sweeps data sizes over the four strategies (plus a Pallas-kernel local-sort
+column, ``B_shared_pallas`` — interpret-mode numbers off-TPU, so read that
+column as a correctness/plumbing check on CPU and a real contender on TPU)
+on a forced multi-device host mesh, autotunes a plan per size bucket, and
+reports what the tuned plan buys over the pre-engine default rule ("cluster
+if mesh else shared_hybrid").  The paper's finding this automates: the shared
+hybrid wins small sizes, the cluster MSD-radix model wins large ones — where
+the crossover sits depends on the machine, which is exactly why it's
+measured, not hard-coded.
 
 Prints ``name,us_per_call,derived`` CSV rows (benchmark harness contract).
 
@@ -37,6 +40,7 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     from repro.engine.planner import (
+        PALLAS_INTERPRET_MAX,
         Planner,
         SortPlan,
         _time_plan,
@@ -60,13 +64,21 @@ def main(argv=None):
     strategies = {
         "A_shared_merge": plan_from_strategy("shared_merge"),
         "B_shared_hybrid": plan_from_strategy("shared_hybrid"),
+        "B_shared_pallas": SortPlan("shared", local_impl="pallas", block_n=256),
         "C_distributed_merge": plan_from_strategy("distributed_merge"),
         "D_cluster": SortPlan("cluster", capacity_factor=2.0, mode="splitters"),
     }
+    interpret_backend = jax.default_backend() != "tpu"
     for n in sizes:
         x = jnp.asarray(rng.integers(100, 1000, size=n).astype(np.int32))
         timings = {}
         for label, plan in strategies.items():
+            if (
+                interpret_backend
+                and plan.local_impl == "pallas"
+                and n > PALLAS_INTERPRET_MAX
+            ):
+                continue  # interpret-mode kernel timings are meaningless at scale
             us = _time_plan(plan, x, mesh, "x", reps=reps)
             timings[label] = us
             rows.append((f"engine/{label}/n={n}", us, ""))

@@ -2,6 +2,10 @@
 
 Import-time compat shims for jax API drift live here so every entry point
 (src modules, test subprocess snippets, examples) sees one consistent API.
+
+Public façade: ``repro.sort`` (the autotuned front door over the paper's four
+models) and the ``repro.engine`` subpackage (plans, key–value sorting, the
+batched serving service).  See ``docs/architecture.md`` for the layer map.
 """
 import jax as _jax
 
@@ -24,3 +28,9 @@ if not hasattr(_jax.lax, "axis_size"):
     # psum of a constant folds to a Python int at trace time — the idiomatic
     # axis-size query before jax grew lax.axis_size.
     _jax.lax.axis_size = lambda axis_name: _jax.lax.psum(1, axis_name)
+
+# the shims above must be installed before any repro module touches jax,
+# so the façade import sits below them deliberately
+from repro.core.api import sort  # noqa: E402
+
+__all__ = ["sort"]

@@ -22,7 +22,13 @@ from .radix import (
     range_bucket,
     splitter_bucket,
 )
-from .seqsort import fast_local_sort, nonrecursive_merge_sort, recursive_merge_sort_host
+from .seqsort import (
+    LOCAL_SORTS,
+    fast_local_sort,
+    nonrecursive_merge_sort,
+    pallas_local_sort,
+    recursive_merge_sort_host,
+)
 from .shared_sort import shared_memory_sort
 
 __all__ = [
@@ -42,6 +48,8 @@ __all__ = [
     "nonrecursive_merge_sort",
     "recursive_merge_sort_host",
     "fast_local_sort",
+    "pallas_local_sort",
+    "LOCAL_SORTS",
     "choose_splitters",
     "decimal_msd_bucket",
     "range_bucket",

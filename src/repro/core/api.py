@@ -5,8 +5,11 @@
                                     else the paper's default rule: model B on
                                     one device, model D on a mesh)
 ``sort(x, mesh=..., axis=...)``  -> model D cluster sort (production path)
-``strategy=`` overrides: 'shared_merge' (A), 'shared_hybrid' (B),
+``strategy=`` overrides: 'shared' / 'shared_hybrid' (B), 'shared_merge' (A),
 'distributed_merge' (C), 'cluster' (D) — these bypass the planner entirely.
+``local_impl=`` / ``block_n=`` further override the per-partition sequential
+sort of whichever plan is selected (e.g. ``local_impl='pallas'`` routes every
+local sort through the VMEM-tiled Pallas kernel).
 
 Key-value sorting, argsort, and the batched serving front door live in
 ``repro.engine`` (kv.py / service.py).
@@ -27,6 +30,8 @@ def sort(
     axis: Optional[str] = None,
     strategy: Optional[str] = None,
     plan=None,
+    local_impl: Optional[str] = None,
+    block_n: Optional[int] = None,
     n_threads: int = 8,
     ascending: bool = True,
     **kwargs,
@@ -35,8 +40,18 @@ def sort(
 
     Precedence: explicit ``strategy=`` > explicit ``plan=`` (a
     ``repro.engine.SortPlan``) > tuned plan from the default planner >
-    the paper's hard-coded rule.
+    the paper's hard-coded rule.  ``local_impl=`` / ``block_n=`` rewrite the
+    selected plan's local-sort fields whichever way it was chosen.
+
+    >>> import jax.numpy as jnp
+    >>> [int(v) for v in sort(jnp.array([3, 1, 2]))]
+    [1, 2, 3]
+    >>> [int(v) for v in sort(jnp.array([3, 1, 2]), strategy="shared",
+    ...                       local_impl="pallas", n_threads=2)]
+    [1, 2, 3]
     """
+    from dataclasses import replace
+
     from repro.engine.planner import default_planner, plan_from_strategy, run_plan
 
     if strategy is not None:
@@ -50,4 +65,8 @@ def sort(
             plan = plan_from_strategy("cluster")
         elif plan is None:  # pre-engine rule, honouring the n_threads argument
             plan = plan_from_strategy("shared_hybrid", n_threads=n_threads)
+    if local_impl is not None:
+        plan = replace(plan, local_impl=local_impl)
+    if block_n is not None:
+        plan = replace(plan, block_n=block_n)
     return run_plan(plan, x, mesh=mesh, axis=axis, ascending=ascending, **kwargs)

@@ -261,6 +261,7 @@ def cluster_sort_local(
     partitioner: Callable[[jax.Array], jax.Array],
     n_buckets: int,
     local_impl: str = "xla",
+    block_n: Optional[int] = None,
 ):
     """shard_map body for model D. local: (m,) shard. Returns
     (sorted_slab (B/P*C per shard,), my_count, overflow): entries
@@ -275,7 +276,7 @@ def cluster_sort_local(
         local, None, bucket, axis_name, capacity=capacity, n_buckets=n_buckets
     )
     flat = ex.recv_keys.reshape(-1)
-    sorted_slab = fast_local_sort(flat, ascending=True, impl=local_impl)
+    sorted_slab = fast_local_sort(flat, ascending=True, impl=local_impl, block_n=block_n)
     global_counts = jax.lax.psum(ex.counts, axis_name)  # (n_buckets,)
     owner = (jnp.arange(n_buckets, dtype=jnp.int32) * P_) // n_buckets
     my_count = jnp.sum(jnp.where(owner == idx, global_counts, 0)).astype(jnp.int32)
@@ -284,7 +285,8 @@ def cluster_sort_local(
 
 @lru_cache(maxsize=256)
 def _compiled_cluster_sort(
-    mesh, axis, mode, capacity, part_buckets, n_buckets, digits, lo, hi, local_impl
+    mesh, axis, mode, capacity, part_buckets, n_buckets, digits, lo, hi, local_impl,
+    block_n=None,
 ):
     """One jitted shard_map per static config — repeated cluster_sort calls
     (serving traffic, autotune reps) reuse the traced executable instead of
@@ -299,6 +301,7 @@ def _compiled_cluster_sort(
         partitioner=part,
         n_buckets=n_buckets,
         local_impl=local_impl,
+        block_n=block_n,
     )
     return jax.jit(
         jax.shard_map(
@@ -318,6 +321,7 @@ def cluster_sort(
     lo=0,
     hi=1,
     local_impl: str = "xla",
+    block_n: Optional[int] = None,
     max_retries: int = 4,
 ):
     """Sort 1-D ``x`` across ``mesh[axis]`` with the paper's cluster algorithm.
@@ -325,7 +329,8 @@ def cluster_sort(
     Returns (sorted_x, valid) where ``sorted_x`` is (P*C_total,) with shard p's
     contiguous range in slots [p*C_total + 0, p*C_total + counts[p]); ``valid``
     masks real entries. Retries with doubled capacity on overflow (the
-    fault-tolerant wrapper promised in DESIGN.md §2).
+    fault-tolerant wrapper promised in DESIGN.md §2). ``block_n`` tunes
+    ``local_impl='pallas'``.
     """
     P_ = mesh.shape[axis]
     n = x.shape[-1]
@@ -336,7 +341,8 @@ def cluster_sort(
 
     for _ in range(max_retries + 1):
         fn = _compiled_cluster_sort(
-            mesh, axis, mode, cap, part_buckets, n_buckets, digits, lo, hi, local_impl
+            mesh, axis, mode, cap, part_buckets, n_buckets, digits, lo, hi, local_impl,
+            block_n,
         )
         slab, counts, overflow = fn(x)
         if not bool(overflow):

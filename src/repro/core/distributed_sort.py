@@ -30,7 +30,13 @@ from .seqsort import fast_local_sort
 __all__ = ["distributed_merge_sort", "merge_tree_local"]
 
 
-def merge_tree_local(local: jax.Array, axis_name: str, *, local_impl: str = "xla"):
+def merge_tree_local(
+    local: jax.Array,
+    axis_name: str,
+    *,
+    local_impl: str = "xla",
+    block_n: int | None = None,
+):
     """Body to run inside shard_map. ``local``: (m,) shard of the global array.
 
     Returns the (n,)-sized buffer per device; device 0's buffer is the sorted
@@ -43,7 +49,7 @@ def merge_tree_local(local: jax.Array, axis_name: str, *, local_impl: str = "xla
     sent = sentinel_for(local.dtype, largest=True)
 
     # Fig 3 step 2: local "Quicksort"
-    local = fast_local_sort(local, ascending=True, impl=local_impl)
+    local = fast_local_sort(local, ascending=True, impl=local_impl, block_n=block_n)
     buf = jnp.concatenate([local, jnp.full((n - m,), sent, local.dtype)])
 
     # Fig 3 steps 3–5: binary merge tree
@@ -58,27 +64,36 @@ def merge_tree_local(local: jax.Array, axis_name: str, *, local_impl: str = "xla
     return buf
 
 
-def distributed_merge_sort(x: jax.Array, mesh, axis: str, *, local_impl: str = "xla"):
+def distributed_merge_sort(
+    x: jax.Array,
+    mesh,
+    axis: str,
+    *,
+    local_impl: str = "xla",
+    block_n: int | None = None,
+):
     """Sort 1-D ``x`` (length divisible by mesh axis size) across ``mesh[axis]``.
 
     Returns the sorted array (gathered from device 0's buffer). Memory cost is
     O(n) *per device* — the paper's design; use ``cluster_sort`` for the
-    scalable path.
+    scalable path. ``block_n`` tunes ``local_impl='pallas'``.
     """
     n = x.shape[-1]
     P_ = mesh.shape[axis]
     if n % P_:
         raise ValueError(f"n={n} must divide device count {P_}")
 
-    out = _compiled_merge_tree(mesh, axis, local_impl)(x)
+    out = _compiled_merge_tree(mesh, axis, local_impl, block_n)(x)
     # device 0's buffer occupies the first n entries of the (P*n,) output
     return out[:n]
 
 
 @lru_cache(maxsize=64)
-def _compiled_merge_tree(mesh, axis, local_impl):
+def _compiled_merge_tree(mesh, axis, local_impl, block_n=None):
     """Cache the jitted shard_map so repeated calls don't re-trace."""
-    body = partial(merge_tree_local, axis_name=axis, local_impl=local_impl)
+    body = partial(
+        merge_tree_local, axis_name=axis, local_impl=local_impl, block_n=block_n
+    )
     return jax.jit(
         jax.shard_map(body, mesh=mesh, in_specs=P(axis), out_specs=P(axis))
     )

@@ -28,6 +28,7 @@ from .merge import merge_adjacent
 __all__ = [
     "recursive_merge_sort_host",
     "nonrecursive_merge_sort",
+    "pallas_local_sort",
     "fast_local_sort",
     "LOCAL_SORTS",
 ]
@@ -82,21 +83,59 @@ def nonrecursive_merge_sort(x: jax.Array, *, ascending: bool = True) -> jax.Arra
     return x if ascending else jnp.flip(x, axis=-1)
 
 
-def fast_local_sort(x: jax.Array, *, ascending: bool = True, impl: str = "xla") -> jax.Array:
+def pallas_local_sort(
+    x: jax.Array, *, ascending: bool = True, block_n: int | None = None
+) -> jax.Array:
+    """Shape-safe wrapper over the Pallas VMEM bitonic kernel.
+
+    Accepts any last-axis length >= 1 and arbitrary leading batch dims:
+    non-pow2 lengths are padded with +sentinel keys (``pallas_sort`` does the
+    pad/slice), batches run via ``vmap`` over a flattened leading axis, and
+    descending order flips the valid prefix after the ascending kernel so
+    pad sentinels never leak to the front.  Off-TPU the kernels execute in
+    interpret mode (``pallas_sort``'s auto-detection), so the same code path
+    is testable on CPU and fast on real TPUs.
+    """
+    from repro.kernels.bitonic_sort.ops import (
+        DEFAULT_BLOCK_N,
+        pallas_sort,
+        vmap_last_axis,
+    )
+
+    bn = DEFAULT_BLOCK_N if block_n is None else block_n
+    out = vmap_last_axis(partial(pallas_sort, block_n=bn), x)
+    return out if ascending else jnp.flip(out, axis=-1)
+
+
+def fast_local_sort(
+    x: jax.Array,
+    *,
+    ascending: bool = True,
+    impl: str = "xla",
+    block_n: int | None = None,
+) -> jax.Array:
     """The "sequential Quicksort" role: fastest single-worker sort available.
 
     impl='xla'     -> XLA variadic sort (the platform's tuned local sort)
-    impl='bitonic' -> our branch-free network (what the Pallas kernel runs)
+    impl='bitonic' -> our branch-free network, pure-jnp form
+    impl='pallas'  -> the same network as a VMEM-tiled Pallas kernel
+                      (``block_n`` tunes the tile width; interpret mode off-TPU)
     impl='merge'   -> paper Fig 1(b) non-recursive merge sort
+
+    NaN keys: only 'xla' totally orders NaN; the network impls ('bitonic',
+    'pallas') leave output unspecified for NaN — reject NaN upstream
+    (SortService does) or use 'xla'.
     """
     if impl == "xla":
         out = jnp.sort(x, axis=-1)
         return out if ascending else jnp.flip(out, axis=-1)
     if impl == "bitonic":
         return bitonic_sort(x, ascending=ascending)
+    if impl == "pallas":
+        return pallas_local_sort(x, ascending=ascending, block_n=block_n)
     if impl == "merge":
         return nonrecursive_merge_sort(x, ascending=ascending)
     raise ValueError(f"unknown local sort impl {impl!r}")
 
 
-LOCAL_SORTS = ("xla", "bitonic", "merge")
+LOCAL_SORTS = ("xla", "bitonic", "pallas", "merge")

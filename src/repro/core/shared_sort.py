@@ -26,18 +26,20 @@ from .seqsort import fast_local_sort
 __all__ = ["shared_memory_sort"]
 
 
-@partial(jax.jit, static_argnames=("n_threads", "local_impl", "ascending"))
+@partial(jax.jit, static_argnames=("n_threads", "local_impl", "ascending", "block_n"))
 def shared_memory_sort(
     x: jax.Array,
     *,
     n_threads: int = 8,
     local_impl: str = "xla",
     ascending: bool = True,
+    block_n: int | None = None,
 ) -> jax.Array:
     """Sort the last axis with the paper's shared-memory algorithm.
 
     n_threads must be a power of two (paper: "works with a power of two number
-    of threads"). Arbitrary n is handled by sentinel padding.
+    of threads"). Arbitrary n is handled by sentinel padding. ``block_n`` is
+    the VMEM tile width for ``local_impl='pallas'`` (ignored otherwise).
     """
     if n_threads & (n_threads - 1) or n_threads < 1:
         raise ValueError("n_threads must be a power of two (paper §3.2)")
@@ -51,7 +53,7 @@ def shared_memory_sort(
 
     # Phase 1 — every "thread" sorts its tile (Fig 2 step: call sorting function)
     tiles = x.reshape(*lead, n_threads, tile)
-    tiles = fast_local_sort(tiles, ascending=True, impl=local_impl)
+    tiles = fast_local_sort(tiles, ascending=True, impl=local_impl, block_n=block_n)
     x = tiles.reshape(*lead, np2)
 
     # Phase 2 — binary merge tree (Fig 2 steps a–d), one round per doubling

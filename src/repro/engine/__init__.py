@@ -1,9 +1,13 @@
 """repro.engine — autotuned sort-plan engine (serving-grade front end).
 
-planner  : SortPlan + autotuner + persistent JSON plan cache
+planner  : SortPlan + autotuner + persistent JSON plan cache; candidate
+           sweep covers local_impl='pallas' with a tuned block_n grid
 cache    : compiled-executable cache with pow2 shape bucketing
 kv       : sort_kv / argsort / sort_pairs / topk — records, not just keys
+           (impl='pallas' runs the kernels' stable (key, rank) network)
 service  : SortService — ragged batches in, zero-recompile sorts out
+
+See docs/architecture.md for the layer map and request lifecycle.
 """
 from .cache import CompiledCache, size_bucket
 from .kv import argsort, cluster_sort_kv, sort_kv, sort_pairs, topk

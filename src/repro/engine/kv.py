@@ -35,15 +35,34 @@ def _rev_key(keys: jax.Array) -> jax.Array:
     return -keys
 
 
-def _order_keys(keys: jax.Array, *, ascending: bool) -> jax.Array:
+def _order_keys(
+    keys: jax.Array,
+    *,
+    ascending: bool,
+    impl: str = "xla",
+    block_n: Optional[int] = None,
+) -> jax.Array:
     """Stable argsort along the last axis, either direction.
 
     Descending stability (ties keep original order) sorts the reversed-order
-    key transform ascending.
+    key transform ascending. ``impl='pallas'`` routes through the kernel's
+    stable (key, rank) network — identical permutation, VMEM-tiled execution
+    (but unspecified output for NaN keys, which only 'xla' totally orders).
     """
-    if ascending:
-        return jnp.argsort(keys, axis=-1, stable=True)
-    return jnp.argsort(_rev_key(keys), axis=-1, stable=True)
+    k = keys if ascending else _rev_key(keys)
+    if impl == "pallas":
+        from repro.kernels.bitonic_sort.ops import (
+            DEFAULT_BLOCK_N,
+            pallas_argsort,
+            vmap_last_axis,
+        )
+
+        return vmap_last_axis(
+            partial(pallas_argsort, block_n=block_n or DEFAULT_BLOCK_N), k
+        )
+    if impl != "xla":
+        raise ValueError(f"argsort impl must be 'xla' or 'pallas', got {impl!r}")
+    return jnp.argsort(k, axis=-1, stable=True)
 
 
 def _gather_last(v: jax.Array, order: jax.Array) -> jax.Array:
@@ -142,6 +161,15 @@ def cluster_sort_kv(
     Returns (slab_keys (P*C_total,), slab_values pytree, valid mask); shard
     p's range of the globally sorted records sits in its slab prefix.  Retries
     with doubled capacity on overflow, like ``cluster_sort``.
+
+    >>> import jax, jax.numpy as jnp
+    >>> mesh = jax.make_mesh((jax.device_count(),), ("x",))
+    >>> keys = jnp.arange(16)[::-1]
+    >>> slab, vals, valid = cluster_sort_kv(keys, {"i": jnp.arange(16)}, mesh, "x")
+    >>> [int(v) for v in slab[valid][:4]]
+    [0, 1, 2, 3]
+    >>> [int(v) for v in vals["i"][valid][:4]]   # payload rides along
+    [15, 14, 13, 12]
     """
     P_ = mesh.shape[axis]
     n = keys.shape[-1]
@@ -173,16 +201,25 @@ def sort_kv(
     axis: Optional[str] = None,
     ascending: bool = True,
     compress: bool = False,
+    impl: str = "xla",
+    block_n: Optional[int] = None,
     **cluster_kw,
 ):
     """Stable sort of ``keys`` carrying an arbitrary ``values`` pytree along.
 
-    Single device: any leading batch dims, sorts the last axis.  With
-    ``mesh=``/``axis=``: 1-D keys, model-D exchange of full records, returns
-    dense (n,)-shaped results (the slab is compacted eagerly).
+    Single device: any leading batch dims, sorts the last axis; ``impl=``
+    picks the local argsort engine ('xla' or 'pallas', ``block_n`` = kernel
+    tile width; only 'xla' totally orders NaN keys).  With ``mesh=``/
+    ``axis=``: 1-D keys, model-D exchange of full records, returns dense
+    (n,)-shaped results (the slab is compacted eagerly).
+
+    >>> import jax.numpy as jnp
+    >>> k, v = sort_kv(jnp.array([3, 1, 2]), {"p": jnp.array([0, 1, 2])})
+    >>> [int(i) for i in v["p"]]
+    [1, 2, 0]
     """
     if mesh is None:
-        order = _order_keys(keys, ascending=ascending)
+        order = _order_keys(keys, ascending=ascending, impl=impl, block_n=block_n)
         return _gather_last(keys, order), jax.tree.map(
             lambda v: _gather_last(v, order), values
         )
@@ -207,7 +244,13 @@ def sort_kv(
 
 def sort_pairs(keys: jax.Array, values: jax.Array, **kwargs):
     """(keys, values) -> (sorted_keys, aligned_values) for a single payload
-    array — the record-sort convenience wrapper over ``sort_kv``."""
+    array — the record-sort convenience wrapper over ``sort_kv``.
+
+    >>> import jax.numpy as jnp
+    >>> k, v = sort_pairs(jnp.array([2, 1]), jnp.array([10, 20]))
+    >>> [int(x) for x in v]
+    [20, 10]
+    """
     k, v = sort_kv(keys, {"v": values}, **kwargs)
     return k, v["v"]
 
@@ -218,13 +261,21 @@ def argsort(
     mesh=None,
     axis: Optional[str] = None,
     ascending: bool = True,
+    impl: str = "xla",
+    block_n: Optional[int] = None,
     **cluster_kw,
 ):
     """Stable argsort (indices into the original array), matching
     ``np.argsort(kind='stable')``. Distributed path carries the global index
-    as the exchange payload."""
+    as the exchange payload; single-device ``impl='pallas'`` runs the kernel's
+    stable (key, rank) network.
+
+    >>> import jax.numpy as jnp
+    >>> [int(i) for i in argsort(jnp.array([30, 10, 20]))]
+    [1, 2, 0]
+    """
     if mesh is None:
-        return _order_keys(keys, ascending=ascending)
+        return _order_keys(keys, ascending=ascending, impl=impl, block_n=block_n)
     iota = jnp.arange(keys.shape[-1], dtype=jnp.int32)
     _, idx = sort_pairs(
         keys, iota, mesh=mesh, axis=axis, ascending=ascending, **cluster_kw
@@ -232,12 +283,25 @@ def argsort(
     return idx
 
 
-def topk(x: jax.Array, k: int, *, largest: bool = True):
+def topk(
+    x: jax.Array,
+    k: int,
+    *,
+    largest: bool = True,
+    impl: str = "xla",
+    block_n: Optional[int] = None,
+):
     """Top-k (values, indices) along the last axis via the engine argsort.
 
     Matches ``jax.lax.top_k`` tie behaviour (lowest index wins) because the
-    descending argsort is stable.
+    descending argsort is stable — with ``impl='pallas'`` included, since the
+    kernel's (key, rank) comparator is stable by construction.
+
+    >>> import jax.numpy as jnp
+    >>> vals, idx = topk(jnp.array([1.0, 9.0, 4.0]), 2)
+    >>> [float(v) for v in vals], [int(i) for i in idx]
+    ([9.0, 4.0], [1, 2])
     """
-    order = _order_keys(x, ascending=not largest)
+    order = _order_keys(x, ascending=not largest, impl=impl, block_n=block_n)
     top_idx = order[..., :k]
     return jnp.take_along_axis(x, top_idx, axis=-1), top_idx

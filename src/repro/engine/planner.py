@@ -40,6 +40,8 @@ __all__ = [
     "plan_from_strategy",
     "run_plan",
     "autotune",
+    "PALLAS_BLOCK_SWEEP",
+    "PALLAS_INTERPRET_MAX",
 ]
 
 _PLAN_VERSION = 1
@@ -51,13 +53,23 @@ _PLAN_STRATEGIES = ("shared", "distributed_merge", "cluster")
 
 @dataclass(frozen=True)
 class SortPlan:
-    """One executable sort recipe; ``us_per_call`` records the tuned timing."""
+    """One executable sort recipe; ``us_per_call`` records the tuned timing.
+
+    ``block_n`` is the Pallas kernel's VMEM tile width; it is only meaningful
+    for ``local_impl='pallas'`` and rides through the JSON plan cache so a
+    plan tuned on a TPU ships with its winning tile size.
+
+    >>> plan = SortPlan("shared", local_impl="pallas", block_n=512)
+    >>> SortPlan.from_dict(plan.to_dict()) == plan
+    True
+    """
 
     strategy: str = "shared"
     local_impl: str = "xla"
     n_threads: int = 8
     capacity_factor: float = 2.0
     mode: str = "splitters"
+    block_n: Optional[int] = None
     us_per_call: float = -1.0
 
     def to_dict(self) -> dict:
@@ -70,7 +82,11 @@ class SortPlan:
 
 
 def mesh_fingerprint(mesh=None) -> str:
-    """Stable id for the hardware layout a plan was tuned on."""
+    """Stable id for the hardware layout a plan was tuned on.
+
+    >>> mesh_fingerprint().split("/")[0]   # no mesh: 'local/<platform>'
+    'local'
+    """
     if mesh is None:
         dev = jax.devices()[0]
         return f"local/{dev.platform}"
@@ -79,13 +95,26 @@ def mesh_fingerprint(mesh=None) -> str:
 
 
 def plan_key(n: int, dtype, mesh=None) -> str:
-    """(size-bucket, dtype, mesh fingerprint) -> plan-cache key."""
+    """(size-bucket, dtype, mesh fingerprint) -> plan-cache key.
+
+    >>> plan_key(3000, jnp.int32) == plan_key(4096, jnp.int32)  # same bucket
+    True
+    >>> plan_key(4096, jnp.int32) == plan_key(4097, jnp.int32)  # next bucket
+    False
+    """
     return f"{next_pow2(n)}|{jnp.dtype(dtype).name}|{mesh_fingerprint(mesh)}"
 
 
 def plan_from_strategy(strategy: str, *, n_threads: int = 8) -> SortPlan:
-    """Map the public api.py strategy names onto plans (back-compat)."""
+    """Map the public api.py strategy names onto plans (back-compat).
+
+    >>> plan_from_strategy("shared_merge").local_impl
+    'merge'
+    >>> plan_from_strategy("shared").strategy
+    'shared'
+    """
     table = {
+        "shared": SortPlan("shared", local_impl="xla", n_threads=n_threads),
         "shared_merge": SortPlan("shared", local_impl="merge", n_threads=n_threads),
         "shared_hybrid": SortPlan("shared", local_impl="xla", n_threads=n_threads),
         "distributed_merge": SortPlan("distributed_merge"),
@@ -110,7 +139,11 @@ def run_plan(
     ascending: bool = True,
     **kwargs,
 ):
-    """Execute a plan. Cluster plans return (slab, valid) like cluster_sort."""
+    """Execute a plan. Cluster plans return (slab, valid) like cluster_sort.
+
+    >>> [int(v) for v in run_plan(SortPlan("shared"), jnp.array([3, 1, 2]))]
+    [1, 2, 3]
+    """
     if not ascending and plan.strategy == "cluster":
         raise ValueError(
             "the cluster strategy sorts ascending only; for descending "
@@ -118,16 +151,22 @@ def run_plan(
         )
     if plan.strategy == "shared":
         return shared_memory_sort(
-            x, n_threads=plan.n_threads, local_impl=plan.local_impl, ascending=ascending
+            x,
+            n_threads=plan.n_threads,
+            local_impl=plan.local_impl,
+            ascending=ascending,
+            block_n=plan.block_n,
         )
     if mesh is None or axis is None:
         raise ValueError(f"plan strategy {plan.strategy!r} requires mesh= and axis=")
     if plan.strategy == "distributed_merge":
         kwargs.setdefault("local_impl", plan.local_impl)
+        kwargs.setdefault("block_n", plan.block_n)
         out = distributed_merge_sort(x, mesh, axis, **kwargs)
         return out if ascending else jnp.flip(out, -1)
     if plan.strategy == "cluster":
         kwargs.setdefault("local_impl", plan.local_impl)
+        kwargs.setdefault("block_n", plan.block_n)
         kwargs.setdefault("mode", plan.mode)
         kwargs.setdefault("capacity_factor", plan.capacity_factor)
         return cluster_sort(x, mesh, axis, **kwargs)
@@ -144,10 +183,26 @@ def _time_plan(plan, x, mesh, axis, *, reps: int, **kwargs) -> float:
     return (time.perf_counter() - t0) / reps * 1e6
 
 
+PALLAS_BLOCK_SWEEP = (256, 512, 1024)
+
+# Off-TPU the Pallas kernels run in interpret mode, which is a correctness
+# path, not a perf path — timing it on multi-million-key buckets would stall
+# an autotune sweep for minutes to learn nothing. Cells above this size only
+# sweep pallas candidates on a real TPU backend.
+PALLAS_INTERPRET_MAX = 1 << 16
+
+
 def candidate_plans(mesh=None, *, quick: bool = False):
-    """The tuning grid: strategies x local_impl (x capacity for model D)."""
-    impls = ("xla", "merge") if quick else LOCAL_SORTS
+    """The tuning grid: strategies x local_impl (x capacity for model D).
+
+    ``local_impl='pallas'`` enters the sweep with one candidate per tile
+    width in ``PALLAS_BLOCK_SWEEP`` (quick mode: just the smallest), so the
+    tuned plan pins the ``block_n`` that measured fastest for its cell.
+    """
+    impls = ("xla", "merge") if quick else tuple(i for i in LOCAL_SORTS if i != "pallas")
     cands = [SortPlan("shared", local_impl=i) for i in impls]
+    blocks = PALLAS_BLOCK_SWEEP[:1] if quick else PALLAS_BLOCK_SWEEP
+    cands += [SortPlan("shared", local_impl="pallas", block_n=b) for b in blocks]
     if mesh is not None:
         cands += [SortPlan("distributed_merge", local_impl="xla")]
         cfs = (2.0,) if quick else (1.5, 2.0)
@@ -159,7 +214,11 @@ def candidate_plans(mesh=None, *, quick: bool = False):
 
 
 class Planner:
-    """Plan table: lookup tuned plans, autotune missing cells, persist JSON."""
+    """Plan table: lookup tuned plans, autotune missing cells, persist JSON.
+
+    >>> Planner().plan_for(1000, jnp.int32).strategy   # untuned: default rule
+    'shared'
+    """
 
     def __init__(self, path: Optional[str] = None):
         self.path = path
@@ -233,9 +292,23 @@ class Planner:
                 raise ValueError(
                     f"axis size {P_} must divide the size bucket {nb}"
                 )
+        interpret_backend = jax.default_backend() != "tpu"
         best = None
         for cand in candidate_plans(mesh, quick=quick):
-            us = _time_plan(cand, x, mesh, axis, reps=reps, **kwargs)
+            if (
+                interpret_backend
+                and cand.local_impl == "pallas"
+                and nb > PALLAS_INTERPRET_MAX
+            ):
+                continue  # interpret-mode kernels: correctness path, not timeable
+            try:
+                us = _time_plan(cand, x, mesh, axis, reps=reps, **kwargs)
+            except Exception:
+                if cand.local_impl != "pallas":
+                    raise
+                # a pallas tile the local Mosaic/backend can't lower is a
+                # skipped candidate, not a failed sweep
+                continue
             cand = replace(cand, us_per_call=round(us, 2))
             if best is None or cand.us_per_call < best.us_per_call:
                 best = cand
@@ -249,7 +322,11 @@ _DEFAULT: Optional[Planner] = None
 
 
 def default_planner() -> Planner:
-    """Process-wide planner; honours $REPRO_SORT_PLANS as its backing file."""
+    """Process-wide planner; honours $REPRO_SORT_PLANS as its backing file.
+
+    >>> default_planner() is default_planner()   # one table per process
+    True
+    """
     global _DEFAULT
     if _DEFAULT is None:
         _DEFAULT = Planner(os.environ.get("REPRO_SORT_PLANS"))
@@ -257,5 +334,9 @@ def default_planner() -> Planner:
 
 
 def autotune(n: int, dtype=jnp.int32, **kwargs) -> SortPlan:
-    """Module-level convenience: autotune into the default planner."""
+    """Module-level convenience: autotune into the default planner.
+
+    >>> autotune(64, reps=1, quick=True, save=False).strategy
+    'shared'
+    """
     return default_planner().autotune(n, dtype, **kwargs)

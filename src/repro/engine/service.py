@@ -33,6 +33,12 @@ _KINDS = ("sort", "argsort", "sort_kv")
 
 @dataclass
 class ServiceStats:
+    """Rolling counters for one ``SortService`` (requests, padding, compiles).
+
+    >>> ServiceStats(keys_in=100, elapsed_s=2.0).throughput_keys_per_s()
+    50.0
+    """
+
     requests: int = 0
     batches: int = 0
     keys_in: int = 0
@@ -53,7 +59,16 @@ def _np_sentinel(dtype: np.dtype, *, largest: bool):
 
 
 class SortService:
-    """Shape-bucketed, plan-driven batch sorter with recompile accounting."""
+    """Shape-bucketed, plan-driven batch sorter with recompile accounting.
+
+    >>> import numpy as np
+    >>> svc = SortService()
+    >>> [out] = svc.submit([np.array([3, 1, 2], np.int32)])
+    >>> [int(v) for v in out]
+    [1, 2, 3]
+    >>> svc.stats.requests
+    1
+    """
 
     def __init__(
         self,
@@ -67,22 +82,40 @@ class SortService:
         self.stats = ServiceStats()
 
     # ------------------------------------------------------------ builders ---
+    @staticmethod
+    def _plan_fields(kind: str, plan: SortPlan):
+        """The (impl, block_n, n_threads) that actually shape ``kind``'s
+        program — the executable-cache key uses exactly these, so plans that
+        differ only in fields this kind ignores share one executable."""
+        impl = plan.local_impl
+        if kind != "sort" and impl != "pallas":
+            impl = "xla"  # argsort kinds only have the xla/pallas engines
+        block_n = plan.block_n if impl == "pallas" else None
+        n_threads = plan.n_threads if kind == "sort" else 0
+        return impl, block_n, n_threads
+
     def _builder(self, kind: str, plan: SortPlan, ascending: bool):
+        impl, block_n, n_threads = self._plan_fields(kind, plan)
         if kind == "sort":
             def build():
                 return lambda xb: shared_memory_sort(
                     xb,
-                    n_threads=plan.n_threads,
-                    local_impl=plan.local_impl,
+                    n_threads=n_threads,
+                    local_impl=impl,
                     ascending=ascending,
+                    block_n=block_n,
                 )
         elif kind == "argsort":
             def build():
-                return lambda xb: _order_keys(xb, ascending=ascending)
+                return lambda xb: _order_keys(
+                    xb, ascending=ascending, impl=impl, block_n=block_n
+                )
         else:  # sort_kv
             def build():
                 def f(xb, vb):
-                    order = _order_keys(xb, ascending=ascending)
+                    order = _order_keys(
+                        xb, ascending=ascending, impl=impl, block_n=block_n
+                    )
                     return _gather_last(xb, order), _gather_last(vb, order)
                 return f
         return build
@@ -147,8 +180,11 @@ class SortService:
             plan = self.planner.plan_for(bucket, dtype)
             if plan.strategy != "shared":  # front door is single-host
                 plan = SortPlan("shared")
+            # the executable identity is exactly the plan fields this kind
+            # consumes (block_n changes the traced program for pallas plans)
+            impl, block_n, n_threads = self._plan_fields(kind, plan)
             key = (kind, bucket, bb, dtype_name, ascending,
-                   plan.local_impl, plan.n_threads)
+                   impl, n_threads, block_n)
             args = [jax.ShapeDtypeStruct((bb, bucket), jnp.dtype(dtype))]
 
             if kind == "sort_kv":

@@ -1,3 +1,4 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+# Custom-kernel layer. bitonic_sort/ is the Pallas VMEM-tiled bitonic
+# network behind local_impl="pallas" (core/seqsort.py dispatches to it;
+# engine/planner.py autotunes its block_n). Add new kernels only for
+# compute hot-spots the paper itself optimizes.

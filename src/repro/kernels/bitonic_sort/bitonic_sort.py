@@ -18,10 +18,27 @@ Kernels:
      block pairs, expressed at the jnp level (pure bandwidth, no reuse to
      exploit — XLA emits the optimal elementwise kernel for it).
 
+Each kernel also has a ``*_kv`` twin that carries an int32 rank array through
+the same network with a lexicographic (key, rank) comparator.  Ranks start as
+iota, ranks never tie, so the comparator is a total order and the rank output
+is the *stable* sorting permutation — that one permutation is what
+``ops.pallas_argsort`` / ``ops.pallas_sort_kv`` gather arbitrary value
+payloads with.  Carrying ranks doubles the VMEM working set per program
+(still tiny: 2 * 4 B * block_n) and stays branch-free on VREG lanes.
+
 TPU layout note: blocks are processed as (block_n,) vectors; the power-of-two
-reshapes inside the network lower to lane shuffles/rolls on Mosaic. Keep
-block_n a multiple of 1024 so every sub-reshape stays lane-aligned. Validated
-element-exact against ref.py in interpret mode (CPU) — the TPU is the target.
+reshapes inside the network lower to lane shuffles/rolls on Mosaic. Any pow2
+block_n works (the wrapper clamps it to the padded problem size, and the
+planner sweeps 256/512/1024); multiples of 1024 keep every sub-reshape
+lane-aligned and are the perf-preferred choice on real TPUs — autotune skips
+any candidate whose lowering fails, so an unsupported tile on some Mosaic
+version degrades to "not selected", never a crash. Validated element-exact
+against ref.py in interpret mode (CPU) — the TPU is the target.
+
+Comparator caveat (shared with the pure-jnp network in core/bitonic.py): the
+compare-exchange uses ``>``, under which NaN compares false everywhere — NaN
+keys make the network's output unspecified. Callers that must reject NaN do
+so at the boundary (e.g. SortService); XLA's own sort is the NaN-safe path.
 """
 from __future__ import annotations
 
@@ -44,6 +61,30 @@ def _ce_flat(x, j: int, dir_up_vec):
     return jnp.stack([lo, hi], axis=1).reshape(n)
 
 
+def _ce_flat_kv(x, r, j: int, dir_up_vec):
+    """Compare-exchange carrying ranks: lexicographic (key, rank) comparator.
+
+    Ranks are unique, so ``gt`` is a strict total order — equal keys order by
+    original rank, which is exactly the stable permutation.
+    """
+    n = x.shape[-1]
+    g = n // (2 * j)
+    x2 = x.reshape(g, 2, j)
+    r2 = r.reshape(g, 2, j)
+    a, b = x2[:, 0, :], x2[:, 1, :]
+    ra, rb = r2[:, 0, :], r2[:, 1, :]
+    gt = (a > b) | ((a == b) & (ra > rb))
+    swap = gt == dir_up_vec[:, None]
+    lo = jnp.where(swap, b, a)
+    hi = jnp.where(swap, a, b)
+    rlo = jnp.where(swap, rb, ra)
+    rhi = jnp.where(swap, ra, rb)
+    return (
+        jnp.stack([lo, hi], axis=1).reshape(n),
+        jnp.stack([rlo, rhi], axis=1).reshape(n),
+    )
+
+
 def _block_sort_kernel(x_ref, o_ref, *, block_n: int):
     """Kernel A body: canonical network on one block; direction = block parity."""
     b = pl.program_id(0)
@@ -59,6 +100,25 @@ def _block_sort_kernel(x_ref, o_ref, *, block_n: int):
             dir_up = (blk % 2 == 0) == asc
             x = _ce_flat(x, j, dir_up)
     o_ref[...] = x
+
+
+def _block_sort_kv_kernel(x_ref, r_ref, ox_ref, or_ref, *, block_n: int):
+    """Kernel A (kv twin): (key, rank) network on one block, parity direction."""
+    b = pl.program_id(0)
+    asc = (b % 2) == 0
+    x = x_ref[...]
+    r = r_ref[...]
+    log_n = block_n.bit_length() - 1
+    for stage in range(1, log_n + 1):
+        k = 1 << stage
+        for sub in range(stage - 1, -1, -1):
+            j = 1 << sub
+            g = block_n // (2 * j)
+            blk = (jnp.arange(g) * 2 * j) // k
+            dir_up = (blk % 2 == 0) == asc
+            x, r = _ce_flat_kv(x, r, j, dir_up)
+    ox_ref[...] = x
+    or_ref[...] = r
 
 
 def _block_merge_kernel(x_ref, o_ref, *, block_n: int, k: int):
@@ -78,6 +138,23 @@ def _block_merge_kernel(x_ref, o_ref, *, block_n: int, k: int):
         x = _ce_flat(x, j, dir_up)
         sub //= 2
     o_ref[...] = x
+
+
+def _block_merge_kv_kernel(x_ref, r_ref, ox_ref, or_ref, *, block_n: int, k: int):
+    """Kernel B (kv twin): fused local substages of stage k with ranks."""
+    b = pl.program_id(0)
+    up = ((b * block_n) & k) == 0
+    x = x_ref[...]
+    r = r_ref[...]
+    sub = block_n // 2
+    while sub >= 1:
+        j = sub
+        g = block_n // (2 * j)
+        dir_up = jnp.full((g,), True) == up
+        x, r = _ce_flat_kv(x, r, j, dir_up)
+        sub //= 2
+    ox_ref[...] = x
+    or_ref[...] = r
 
 
 def block_sort(x: jax.Array, block_n: int, *, interpret: bool) -> jax.Array:
@@ -123,3 +200,49 @@ def global_stage(x: jax.Array, j: int, k: int) -> jax.Array:
     lo = jnp.where(swap, b, a)
     hi = jnp.where(swap, a, b)
     return jnp.stack([lo, hi], axis=1).reshape(n)
+
+
+def _kv_specs(block_n: int):
+    spec = pl.BlockSpec((block_n,), lambda b: (b,))
+    return [spec, spec], [spec, spec]
+
+
+def block_sort_kv(x: jax.Array, r: jax.Array, block_n: int, *, interpret: bool):
+    """Launch kernel A (kv twin): returns (keys, ranks) per-block sorted."""
+    nb = x.shape[-1] // block_n
+    in_specs, out_specs = _kv_specs(block_n)
+    return pl.pallas_call(
+        functools.partial(_block_sort_kv_kernel, block_n=block_n),
+        grid=(nb,),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=[
+            jax.ShapeDtypeStruct(x.shape, x.dtype),
+            jax.ShapeDtypeStruct(r.shape, r.dtype),
+        ],
+        interpret=interpret,
+    )(x, r)
+
+
+def block_merge_kv(x: jax.Array, r: jax.Array, block_n: int, k: int, *, interpret: bool):
+    """Launch kernel B (kv twin) over all blocks."""
+    nb = x.shape[-1] // block_n
+    in_specs, out_specs = _kv_specs(block_n)
+    return pl.pallas_call(
+        functools.partial(_block_merge_kv_kernel, block_n=block_n, k=k),
+        grid=(nb,),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=[
+            jax.ShapeDtypeStruct(x.shape, x.dtype),
+            jax.ShapeDtypeStruct(r.shape, r.dtype),
+        ],
+        interpret=interpret,
+    )(x, r)
+
+
+def global_stage_kv(x: jax.Array, r: jax.Array, j: int, k: int):
+    """Cross-block substage (kv twin): (key, rank) compare-exchange at jnp level."""
+    g = x.shape[-1] // (2 * j)
+    dir_up = ((jnp.arange(g) * 2 * j) // k) % 2 == 0
+    return _ce_flat_kv(x, r, j, dir_up)

@@ -1,12 +1,30 @@
-"""Jitted composition of the Pallas bitonic kernels: full-array sort.
+"""Jitted composition of the Pallas bitonic kernels: sort / argsort / kv-sort.
 
-``pallas_sort(x)`` sorts the last axis of a 1-D array whose length is a
-power-of-two multiple of ``block_n``:
+``pallas_sort(x)`` sorts the last axis of a 1-D array of *any* length >= 1:
+the wrapper pads to the next power of two with +sentinel keys, runs the tiled
+network, and slices the valid prefix back out.
 
   phase 1:  kernel A  (per-block alternating-direction sort)
   stages k = 2*block_n .. n:
      j = k/2 .. block_n   : cross-block elementwise compare-exchange (jnp)
      j = block_n/2 .. 1   : kernel B (one fused VMEM pass)
+
+``pallas_argsort(x)`` runs the same network on (key, rank) pairs with a
+lexicographic comparator (kernels' ``*_kv`` twins) — ranks never tie, so the
+returned permutation is the *stable* one, matching
+``np.argsort(kind='stable')``.  ``pallas_sort_kv(keys, values)`` gathers an
+arbitrary values pytree by that permutation.
+
+``block_n`` is the VMEM tile width and the kernels' main tuning knob: bigger
+blocks fuse more substages per HBM round-trip but raise per-program VMEM
+pressure.  It must be a power of two; it is clamped to the (padded) problem
+size, so any ``block_n`` is safe for any input length.  ``engine.planner``
+sweeps {256, 512, 1024} per size bucket and persists the winner in the plan
+cache.
+
+NaN caveat: like the pure-jnp bitonic network (and unlike XLA's sort), the
+comparator is plain ``>``, so NaN float keys produce unspecified output —
+reject or strip NaN at the boundary (``SortService`` does).
 
 On CPU (this container) the kernels run in interpret mode; on TPU they compile
 through Mosaic. ``interpret=None`` auto-detects.
@@ -18,11 +36,50 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from .bitonic_sort import block_merge, block_sort, global_stage
+from repro.core.bitonic import next_pow2, sentinel_for
+
+from .bitonic_sort import (
+    block_merge,
+    block_merge_kv,
+    block_sort,
+    block_sort_kv,
+    global_stage,
+    global_stage_kv,
+)
+
+__all__ = [
+    "pallas_sort",
+    "pallas_argsort",
+    "pallas_sort_kv",
+    "vmap_last_axis",
+    "DEFAULT_BLOCK_N",
+]
+
+DEFAULT_BLOCK_N = 1024
 
 
 def _auto_interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+def vmap_last_axis(fn, x: jax.Array) -> jax.Array:
+    """Apply a 1-D-in/1-D-out ``fn`` over the last axis of any-rank ``x``.
+
+    The shared batching wrapper for the 1-D kernel entry points below
+    (used by core.seqsort and engine.kv so the semantics live in one place).
+    """
+    if x.ndim == 1:
+        return fn(x)
+    *lead, n = x.shape
+    return jax.vmap(fn)(x.reshape(-1, n)).reshape(*lead, n)
+
+
+def _resolve_shape(n: int, block_n: int):
+    """(padded length, effective block_n) for an arbitrary input length."""
+    if block_n < 1 or block_n & (block_n - 1):
+        raise ValueError(f"block_n={block_n} must be a power of two")
+    np2 = next_pow2(max(n, 1))
+    return np2, min(block_n, np2)
 
 
 @functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
@@ -40,15 +97,78 @@ def _pallas_sort_impl(x, *, block_n: int, interpret: bool):
     return x
 
 
-def pallas_sort(x: jax.Array, *, block_n: int = 1024, interpret=None) -> jax.Array:
-    """Sort 1-D ``x`` (length = pow2 multiple of block_n) ascending."""
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def _pallas_argsort_impl(x, *, block_n: int, interpret: bool):
+    n = x.shape[-1]
+    r = jnp.arange(n, dtype=jnp.int32)
+    x, r = block_sort_kv(x, r, block_n, interpret=interpret)
+    k = 2 * block_n
+    while k <= n:
+        j = k // 2
+        while j >= block_n:
+            x, r = global_stage_kv(x, r, j, k)
+            j //= 2
+        x, r = block_merge_kv(x, r, block_n, k, interpret=interpret)
+        k *= 2
+    return x, r
+
+
+def pallas_sort(x: jax.Array, *, block_n: int = DEFAULT_BLOCK_N, interpret=None) -> jax.Array:
+    """Sort 1-D ``x`` (any length >= 1) ascending via the tiled Pallas network.
+
+    Non-pow2 lengths are padded with +sentinel keys and sliced back; pad keys
+    can only displace *equal* (sentinel-valued) real keys, so the prefix is
+    always the correct sorted output.
+    """
     if x.ndim != 1:
         raise ValueError("pallas_sort expects a 1-D array")
     n = x.shape[-1]
-    if n % block_n or n & (n - 1):
-        raise ValueError(f"n={n} must be a power-of-two multiple of block_n={block_n}")
-    if n == block_n or n < block_n:
-        block_n = min(block_n, n)
+    if n < 1:
+        raise ValueError("pallas_sort needs at least one element")
+    np2, block_n = _resolve_shape(n, block_n)
     if interpret is None:
         interpret = _auto_interpret()
-    return _pallas_sort_impl(x, block_n=block_n, interpret=interpret)
+    if np2 != n:
+        x = jnp.pad(x, (0, np2 - n), constant_values=sentinel_for(x.dtype, largest=True))
+    out = _pallas_sort_impl(x, block_n=block_n, interpret=interpret)
+    return out[:n] if np2 != n else out
+
+
+def pallas_argsort(
+    x: jax.Array, *, block_n: int = DEFAULT_BLOCK_N, interpret=None
+) -> jax.Array:
+    """Stable ascending argsort of 1-D ``x`` (any length >= 1).
+
+    Matches ``np.argsort(kind='stable')``: the (key, rank) comparator in the
+    kv kernels is a total order, and pad entries (sentinel key, rank >= n)
+    sort after every real element — even real elements equal to the sentinel,
+    whose ranks are < n — so the sliced prefix only holds valid indices.
+    """
+    if x.ndim != 1:
+        raise ValueError("pallas_argsort expects a 1-D array")
+    n = x.shape[-1]
+    if n < 1:
+        raise ValueError("pallas_argsort needs at least one element")
+    np2, block_n = _resolve_shape(n, block_n)
+    if interpret is None:
+        interpret = _auto_interpret()
+    if np2 != n:
+        x = jnp.pad(x, (0, np2 - n), constant_values=sentinel_for(x.dtype, largest=True))
+    _, perm = _pallas_argsort_impl(x, block_n=block_n, interpret=interpret)
+    return perm[:n] if np2 != n else perm
+
+
+def pallas_sort_kv(
+    keys: jax.Array,
+    values,
+    *,
+    block_n: int = DEFAULT_BLOCK_N,
+    interpret=None,
+):
+    """Stable key-value sort: 1-D keys, values pytree of (n, ...) payloads.
+
+    Sorts the keys with the kv network and gathers every values leaf by the
+    induced (stable) permutation. Returns ``(sorted_keys, permuted_values)``.
+    """
+    perm = pallas_argsort(keys, block_n=block_n, interpret=interpret)
+    return keys[perm], jax.tree.map(lambda v: v[perm], values)

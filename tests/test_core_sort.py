@@ -112,3 +112,40 @@ def test_batched_leading_dims():
     x = rng.standard_normal((2, 3, 50)).astype(np.float32)
     out = np.asarray(bitonic_sort(jnp.asarray(x)))
     assert np.allclose(out, np.sort(x, -1))
+
+
+# -------------------------------------------------- pallas local_impl path ---
+# interpret mode off-TPU: small sizes/block_n keep the per-shape compiles cheap
+@pytest.mark.parametrize("n", [1, 100, 256, 700])  # non-pow2 included
+@pytest.mark.parametrize("n_threads", [2, 8])
+def test_shared_memory_sort_pallas_impl(n, n_threads):
+    rng = np.random.default_rng(6)
+    x = rng.integers(-10_000, 10_000, n).astype(np.int32)
+    out = shared_memory_sort(
+        jnp.asarray(x), n_threads=n_threads, local_impl="pallas", block_n=64
+    )
+    assert (np.asarray(out) == np.sort(x)).all()
+
+
+def test_shared_memory_sort_pallas_batched_and_descending():
+    rng = np.random.default_rng(7)
+    x = rng.standard_normal((2, 3, 100)).astype(np.float32)
+    out = shared_memory_sort(jnp.asarray(x), n_threads=4, local_impl="pallas", block_n=64)
+    assert np.allclose(np.asarray(out), np.sort(x, -1))
+    out = shared_memory_sort(
+        jnp.asarray(x), n_threads=4, local_impl="pallas", block_n=64, ascending=False
+    )
+    assert np.allclose(np.asarray(out), np.sort(x, -1)[..., ::-1])
+
+
+def test_fast_local_sort_pallas_matches_xla():
+    from repro.core import fast_local_sort
+
+    rng = np.random.default_rng(8)
+    x = rng.integers(0, 100, (4, 130)).astype(np.int32)  # batched, non-pow2
+    got = fast_local_sort(jnp.asarray(x), impl="pallas", block_n=64)
+    assert (np.asarray(got) == np.sort(x, -1)).all()
+    got = fast_local_sort(jnp.asarray(x), impl="pallas", block_n=64, ascending=False)
+    assert (np.asarray(got) == np.sort(x, -1)[..., ::-1]).all()
+    with pytest.raises(ValueError):
+        fast_local_sort(jnp.asarray(x), impl="nope")

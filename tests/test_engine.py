@@ -51,6 +51,52 @@ def test_plan_key_separates_dtype_and_bucket():
     assert plan_key(4096, jnp.int32) != plan_key(4097, jnp.int32)
 
 
+def test_autotune_sweeps_pallas_and_roundtrips_block_n(tmp_path):
+    """Acceptance: the full candidate sweep contains pallas plans with a
+    block_n grid, and a tuned pallas plan survives the JSON round-trip."""
+    from repro.engine.planner import PALLAS_BLOCK_SWEEP, candidate_plans
+
+    cands = candidate_plans()
+    pallas = [c for c in cands if c.local_impl == "pallas"]
+    assert sorted(c.block_n for c in pallas) == sorted(PALLAS_BLOCK_SWEEP)
+    assert [c for c in cands if c.local_impl == "xla"], "xla stays in the sweep"
+
+    # an actual sweep on this container: small bucket keeps interpret mode cheap
+    path = str(tmp_path / "plans.json")
+    planner = Planner(path)
+    plan = planner.autotune(200, jnp.int32, reps=1)
+    assert plan.us_per_call > 0
+    reloaded = Planner(path).lookup(200, jnp.int32)
+    assert reloaded == plan
+    assert reloaded.block_n == plan.block_n  # tuned block_n round-trips
+
+    # a pallas winner (forced) round-trips its tile width exactly
+    planner.plans[plan_key(8192, jnp.float32)] = SortPlan(
+        "shared", local_impl="pallas", block_n=512
+    )
+    planner.save()
+    got = Planner(path).lookup(8192, jnp.float32)
+    assert got.local_impl == "pallas" and got.block_n == 512
+
+
+def test_api_sort_pallas_local_impl_matches_numpy():
+    """Acceptance: sort(x, strategy='shared', local_impl='pallas') == np.sort
+    for non-pow2 and batched inputs (interpret mode on this container)."""
+    from repro.core import sort
+
+    rng = np.random.default_rng(11)
+    x = rng.integers(-500, 500, 777).astype(np.int32)  # non-pow2
+    got = sort(jnp.asarray(x), strategy="shared", local_impl="pallas", block_n=128)
+    assert (np.asarray(got) == np.sort(x)).all()
+    xb = rng.standard_normal((2, 3, 100)).astype(np.float32)  # batched
+    got = sort(jnp.asarray(xb), strategy="shared", local_impl="pallas", block_n=64,
+               n_threads=4)
+    assert np.allclose(np.asarray(got), np.sort(xb, -1))
+    got = sort(jnp.asarray(x), plan=SortPlan("shared", local_impl="pallas", block_n=128),
+               ascending=False)
+    assert (np.asarray(got) == np.sort(x)[::-1]).all()
+
+
 def test_api_sort_honours_strategy_and_plan_overrides():
     from repro.core import sort
 
@@ -100,6 +146,34 @@ def test_topk_matches_lax_top_k():
     x[:, 10] = x[:, 20]  # force ties
     vals, idx = topk(jnp.asarray(x), 8)
     lv, li = jax.lax.top_k(jnp.asarray(x), 8)
+    assert np.allclose(np.asarray(vals), np.asarray(lv))
+    assert (np.asarray(idx) == np.asarray(li)).all()
+
+
+def test_kv_pallas_impl_matches_numpy_stable():
+    """sort_kv / argsort / topk on the kernel path: exact np.argsort(stable)
+    equivalence, non-pow2 and batched, both directions."""
+    rng = np.random.default_rng(12)
+    k = rng.integers(0, 7, 300).astype(np.int32)  # duplicate-heavy
+    ref = np.argsort(k, kind="stable")
+    assert (np.asarray(argsort(jnp.asarray(k), impl="pallas", block_n=64)) == ref).all()
+    refd = np.argsort(~k, kind="stable")
+    got = argsort(jnp.asarray(k), impl="pallas", block_n=64, ascending=False)
+    assert (np.asarray(got) == refd).all()
+
+    kb = rng.standard_normal((3, 100)).astype(np.float32)  # batched kv round-trip
+    v = {"a": rng.standard_normal((3, 100, 2)).astype(np.float32)}
+    sk, sv = sort_kv(jnp.asarray(kb), jax.tree.map(jnp.asarray, v),
+                     impl="pallas", block_n=64)
+    order = np.argsort(kb, axis=-1, kind="stable")
+    assert np.allclose(np.asarray(sk), np.take_along_axis(kb, order, -1))
+    assert np.allclose(np.asarray(sv["a"]),
+                       np.take_along_axis(v["a"], order[..., None], 1))
+
+    x = rng.standard_normal((2, 64)).astype(np.float32)
+    x[:, 3] = x[:, 9]  # ties: stable descending == lax.top_k
+    vals, idx = topk(jnp.asarray(x), 5, impl="pallas", block_n=64)
+    lv, li = jax.lax.top_k(jnp.asarray(x), 5)
     assert np.allclose(np.asarray(vals), np.asarray(lv))
     assert (np.asarray(idx) == np.asarray(li)).all()
 
@@ -207,6 +281,30 @@ def test_service_sort_kv_mixed_value_shapes_same_bucket():
     for r, v, (sk, sv) in zip(reqs, vals, svc.submit(reqs, kind="sort_kv", values=vals)):
         ref = np.argsort(r, kind="stable")
         assert (sk == r[ref]).all() and (sv == v[ref]).all()
+
+
+def test_service_runs_tuned_pallas_plan_and_keys_on_block_n():
+    """A planner cell tuned to pallas drives the service's local sort; two
+    plans differing only in block_n must compile distinct executables."""
+    rng = np.random.default_rng(6)
+    planner = Planner()
+    planner.plans[plan_key(512, jnp.int32)] = SortPlan(
+        "shared", local_impl="pallas", block_n=64
+    )
+    svc = SortService(planner=planner)
+    reqs = [rng.integers(0, 1000, n).astype(np.int32) for n in (500, 400)]
+    for r, o in zip(reqs, svc.submit(reqs)):
+        assert (o == np.sort(r)).all()
+    entries_before = len(svc.cache.executables)
+
+    planner.plans[plan_key(512, jnp.int32)] = SortPlan(
+        "shared", local_impl="pallas", block_n=128
+    )
+    for r, o in zip(reqs, svc.submit(reqs)):
+        assert (o == np.sort(r)).all()
+    assert len(svc.cache.executables) == entries_before + 1, (
+        "block_n must be part of the executable cache key"
+    )
 
 
 def test_size_bucket_pow2():

@@ -1,11 +1,12 @@
 """Pallas bitonic kernels vs pure-jnp oracles (interpret mode, shape sweep)."""
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.kernels.bitonic_sort import ref
 from repro.kernels.bitonic_sort.bitonic_sort import block_merge, block_sort, global_stage
-from repro.kernels.bitonic_sort.ops import pallas_sort
+from repro.kernels.bitonic_sort.ops import pallas_argsort, pallas_sort, pallas_sort_kv
 
 RNG = np.random.default_rng(0)
 
@@ -55,6 +56,44 @@ def test_pallas_sort_bf16():
 
 def test_pallas_sort_rejects_bad_shapes():
     with pytest.raises(ValueError):
-        pallas_sort(jnp.zeros((2, 4)))
+        pallas_sort(jnp.zeros((2, 4)))  # not 1-D
     with pytest.raises(ValueError):
-        pallas_sort(jnp.zeros(100))  # not a power of two
+        pallas_sort(jnp.zeros(16), block_n=48)  # block_n not a power of two
+    with pytest.raises(ValueError):
+        pallas_argsort(jnp.zeros((2, 4)))
+
+
+@pytest.mark.parametrize("n", [1, 2, 3, 100, 500, 1000])
+def test_pallas_sort_any_length(n):
+    """Regression: non-pow2 and n < block_n both used to raise — the modulo
+    check fired before the block_n clamp. Any length >= 1 must now work."""
+    x = (RNG.standard_normal(n) * 1000).astype(np.int32)
+    got = np.asarray(pallas_sort(jnp.asarray(x), block_n=256))
+    np.testing.assert_array_equal(got, np.sort(x))
+
+
+def test_pallas_sort_padding_with_sentinel_valued_keys():
+    """Keys equal to the pad sentinel must survive (pads can only displace
+    equal keys, and only beyond the sliced prefix)."""
+    x = np.array([5, np.iinfo(np.int32).max, 1], np.int32)
+    got = np.asarray(pallas_sort(jnp.asarray(x), block_n=64))
+    np.testing.assert_array_equal(got, np.sort(x))
+
+
+@pytest.mark.parametrize("n", [7, 100, 256, 777])
+def test_pallas_argsort_matches_numpy_stable(n):
+    x = RNG.integers(0, 7, n).astype(np.int32)  # duplicate-heavy: stability matters
+    x[0] = np.iinfo(np.int32).max  # and a key equal to the pad sentinel
+    got = np.asarray(pallas_argsort(jnp.asarray(x), block_n=64))
+    np.testing.assert_array_equal(got, np.argsort(x, kind="stable"))
+
+
+def test_pallas_sort_kv_roundtrip():
+    k = (RNG.standard_normal(333) * 10).astype(np.float32)
+    v = {"a": RNG.standard_normal((333, 2)).astype(np.float32),
+         "i": np.arange(333, dtype=np.int32)}
+    sk, sv = pallas_sort_kv(jnp.asarray(k), jax.tree.map(jnp.asarray, v), block_n=128)
+    ref_ord = np.argsort(k, kind="stable")
+    np.testing.assert_array_equal(np.asarray(sk), k[ref_ord])
+    np.testing.assert_array_equal(np.asarray(sv["a"]), v["a"][ref_ord])
+    np.testing.assert_array_equal(np.asarray(sv["i"]), v["i"][ref_ord])

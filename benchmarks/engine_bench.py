@@ -1,5 +1,11 @@
 """Engine benchmark: reproduce the paper's crossover curve, tuned vs default.
 
+Also benchmarks the serving front door: steady-state throughput of the
+async micro-batching queue (``AsyncSortService`` — individual requests
+coalesced across producers) against the hand-batched sync path
+(``SortService.submit`` with a caller-assembled batch).  The delta between
+those two rows is the cost of letting the queue do the batching for you.
+
 Sweeps data sizes over the four strategies (plus a Pallas-kernel local-sort
 column, ``B_shared_pallas`` — interpret-mode numbers off-TPU, so read that
 column as a correctness/plumbing check on CPU and a real contender on TPU)
@@ -20,6 +26,7 @@ from __future__ import annotations
 import argparse
 import os
 import sys
+import time
 
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
 sys.path.insert(
@@ -29,6 +36,56 @@ sys.path.insert(
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
+
+
+def serving_rows(rng, *, reps: int, smoke: bool):
+    """Serving front door: hand-batched sync vs async micro-batching queue.
+
+    Both paths run the identical executable (the queue shares the sync
+    service's compiled cache); the async row pays the queue hop + coalescing
+    window, and its ``derived`` column reports keys/s, batch fill, and the
+    p50 queue latency so the overhead is visible, not vibes.
+    """
+    from repro.engine import AsyncSortService, SortService
+
+    n_req = 16 if smoke else 64
+    req_len = 1000 if smoke else 4000
+    keys_total = n_req * req_len
+    reqs = [rng.integers(0, 1_000_000, req_len).astype(np.int32)
+            for _ in range(n_req)]
+    rows = []
+
+    svc = SortService()
+    svc.submit(reqs)  # warmup: compiles the (n_req, bucket) executable
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        svc.submit(reqs)
+    dt = (time.perf_counter() - t0) / reps
+    rows.append((
+        f"engine/serving_sync_batched/n={req_len}x{n_req}",
+        dt * 1e6,
+        f"keys_per_s={keys_total / dt:.0f}",
+    ))
+
+    asvc = AsyncSortService(svc, max_batch=n_req, max_delay_ms=2.0)
+    for f in [asvc.submit_async(r) for r in reqs]:  # reach steady state
+        f.result()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        futs = [asvc.submit_async(r) for r in reqs]
+        for f in futs:
+            f.result()
+    dt_async = (time.perf_counter() - t0) / reps
+    st = asvc.stats
+    rows.append((
+        f"engine/serving_async_queue/n={req_len}x{n_req}",
+        dt_async * 1e6,
+        f"keys_per_s={keys_total / dt_async:.0f};fill={st.fill_ratio():.2f};"
+        f"queue_p50_ms={st.latency_percentiles()[50] * 1e3:.2f};"
+        f"vs_sync={dt / dt_async:.2f}x",
+    ))
+    asvc.close()
+    return rows
 
 
 def main(argv=None):
@@ -96,6 +153,8 @@ def main(argv=None):
             )
         )
         rows.append((f"engine/default_rule/n={n}", t_default, ""))
+
+    rows += serving_rows(rng, reps=max(reps, 2), smoke=args.smoke)
 
     if args.plans:
         planner.save()

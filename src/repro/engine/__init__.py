@@ -6,6 +6,8 @@ cache    : compiled-executable cache with pow2 shape bucketing
 kv       : sort_kv / argsort / sort_pairs / topk — records, not just keys
            (impl='pallas' runs the kernels' stable (key, rank) network)
 service  : SortService — ragged batches in, zero-recompile sorts out
+queue    : AsyncSortService — async request queue that micro-batches
+           individual submit_async calls across callers (docs/serving.md)
 
 See docs/architecture.md for the layer map and request lifecycle.
 """
@@ -21,6 +23,7 @@ from .planner import (
     plan_key,
     run_plan,
 )
+from .queue import AsyncSortService, QueueStats
 from .service import ServiceStats, SortService
 
 __all__ = [
@@ -41,4 +44,6 @@ __all__ = [
     "run_plan",
     "ServiceStats",
     "SortService",
+    "AsyncSortService",
+    "QueueStats",
 ]

@@ -19,6 +19,7 @@ from __future__ import annotations
 import json
 import os
 import time
+import warnings
 from dataclasses import asdict, dataclass, replace
 from typing import Dict, Optional
 
@@ -227,12 +228,46 @@ class Planner:
             self.load(path)
 
     # ------------------------------------------------------------ storage ---
-    def load(self, path: str) -> "Planner":
-        with open(path) as f:
-            doc = json.load(f)
-        if doc.get("version") != _PLAN_VERSION:
-            raise ValueError(f"plan cache version {doc.get('version')} unsupported")
-        self.plans = {k: SortPlan.from_dict(v) for k, v in doc["plans"].items()}
+    def load(self, path: str, *, strict: bool = False) -> "Planner":
+        """Load a plan-cache file; a serving process must never die because a
+        tuned-plans file rotted on disk.  Corrupt/truncated JSON, an unknown
+        version, or malformed plan entries warn and keep the **current**
+        table — empty at construction (every lookup then uses
+        ``default_plan``), or the last-known-good plans when a live process
+        re-loads a file that rotted mid-write.  Pass ``strict=True`` to
+        re-raise instead (tooling that writes the file).
+        """
+        try:
+            with open(path) as f:
+                doc = json.load(f)
+            if doc.get("version") != _PLAN_VERSION:
+                raise ValueError(
+                    f"plan cache version {doc.get('version')!r} unsupported"
+                )
+            raw = doc["plans"]
+            if not isinstance(raw, dict):
+                raise ValueError("'plans' must be an object")
+            plans = {}
+            for k, v in raw.items():
+                if not isinstance(v, dict):
+                    raise ValueError(f"plan entry {k!r} is not an object")
+                plan = SortPlan.from_dict(v)  # unknown fields: forward-compat
+                if plan.strategy not in _PLAN_STRATEGIES:
+                    raise ValueError(
+                        f"plan entry {k!r} has unknown strategy {plan.strategy!r}"
+                    )
+                plans[k] = plan
+        except Exception as e:
+            if strict:
+                raise
+            warnings.warn(
+                f"ignoring unreadable plan cache {path!r} ({e}); "
+                f"keeping the {len(self.plans)} previously loaded plan(s)",
+                RuntimeWarning,
+                stacklevel=2,
+            )
+            return self
+        self.plans = plans
         return self
 
     def save(self, path: Optional[str] = None) -> str:

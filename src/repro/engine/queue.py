@@ -1,0 +1,349 @@
+"""Async serving front door — cross-caller micro-batching over ``SortService``.
+
+The sync ``SortService.submit`` only batches requests that arrive *in the
+same call*, so callers must hand-assemble well-shaped batches to amortize
+fixed costs — exactly the shape the paper says dominates parallel sort
+throughput.  ``AsyncSortService`` moves that batching behind the API:
+producers on any thread call ``submit_async`` with a single request and get
+a ``concurrent.futures.Future``; one dispatcher thread coalesces requests
+**across callers** into per-(kind, direction, length-bucket, dtype[, value
+signature]) micro-batches under a ``max_batch`` / ``max_delay_ms`` policy and
+executes each batch through ``SortService._run_group`` — the same
+pad/plan/execute core the sync path uses, so the steady state stays
+zero-recompile and every compiled executable is shared between both paths.
+
+Backpressure is a bounded stdlib queue: ``maxsize`` caps admitted-but-unrun
+requests; ``on_full='block'`` makes producers wait for room while
+``on_full='reject'`` raises ``queue.Full`` at the call site.  ``drain()``
+blocks until everything admitted has resolved; ``close()`` drains, stops the
+dispatcher, and rejects later submits (also the context-manager exit path).
+
+``QueueStats`` extends ``ServiceStats`` with queue-level telemetry: batch
+fill ratio, coalesced-batch sizes, and rolling queue-latency percentiles.
+See docs/serving.md for the request lifecycle.
+"""
+from __future__ import annotations
+
+import queue as _stdqueue
+import threading
+import time
+from collections import deque
+from concurrent.futures import Future
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from .planner import Planner
+from .service import ServiceStats, SortService
+
+__all__ = ["AsyncSortService", "QueueStats"]
+
+
+@dataclass
+class QueueStats(ServiceStats):
+    """``ServiceStats`` plus micro-batching telemetry for the async queue.
+
+    ``fill_ratios`` / ``batch_sizes`` / ``queue_latency_s`` are rolling
+    windows (bounded deques), so a long-lived service reports recent steady
+    state rather than lifetime averages.
+
+    >>> s = QueueStats()
+    >>> s.observe_batch(n_requests=6, capacity=8, latencies=[0.002] * 6)
+    >>> round(s.fill_ratio(), 2)
+    0.75
+    >>> s.latency_percentiles()[50]
+    0.002
+    """
+
+    enqueued: int = 0
+    rejected: int = 0
+    coalesced_batches: int = 0
+    coalesced_requests: int = 0
+    fill_ratios: deque = field(default_factory=lambda: deque(maxlen=1024), repr=False)
+    batch_sizes: deque = field(default_factory=lambda: deque(maxlen=1024), repr=False)
+    queue_latency_s: deque = field(
+        default_factory=lambda: deque(maxlen=8192), repr=False
+    )
+
+    def observe_batch(self, *, n_requests: int, capacity: int, latencies) -> None:
+        """Record one executed micro-batch (size, fill vs ``max_batch``, and
+        each member request's time-in-queue)."""
+        self.coalesced_batches += 1
+        self.coalesced_requests += n_requests
+        self.batch_sizes.append(n_requests)
+        self.fill_ratios.append(n_requests / capacity if capacity else 0.0)
+        self.queue_latency_s.extend(latencies)
+
+    def fill_ratio(self) -> float:
+        """Mean batch-fill ratio (requests per batch / max_batch) over the
+        rolling window; 0.0 before any batch has run."""
+        if not self.fill_ratios:
+            return 0.0
+        return sum(self.fill_ratios) / len(self.fill_ratios)
+
+    def latency_percentiles(self, ps=(50, 90, 99)) -> Dict[int, float]:
+        """{percentile: seconds} over the rolling queue-latency window
+        (time from ``submit_async`` to batch execution start)."""
+        lat = sorted(self.queue_latency_s)
+        if not lat:
+            return {p: 0.0 for p in ps}
+        return {
+            p: lat[min(len(lat) - 1, round(p / 100 * (len(lat) - 1)))] for p in ps
+        }
+
+
+class _Request:
+    """One admitted request riding the queue to its micro-batch."""
+
+    __slots__ = ("key", "req", "val", "future", "t_enq")
+
+    def __init__(self, key, req, val, t_enq):
+        self.key = key
+        self.req = req
+        self.val = val
+        self.future: Future = Future()
+        self.t_enq = t_enq
+
+
+class AsyncSortService:
+    """Micro-batching async front door over a ``SortService``.
+
+    Parameters
+    ----------
+    service:      the ``SortService`` to execute on (shares its compiled-
+                  executable cache with sync callers); a fresh one by default.
+    max_batch:    flush a (kind, bucket, dtype) group as soon as it holds this
+                  many requests.
+    max_delay_ms: flush a group at latest this long after its *oldest* request
+                  arrived — the latency bound a half-empty batch waits for.
+    maxsize:      bound on admitted-but-unexecuted requests (0 = unbounded).
+    on_full:      'block' stalls producers while the queue is full;
+                  'reject' raises ``queue.Full`` at the ``submit_async`` site.
+    start:        launch the dispatcher thread immediately (tests pass False
+                  to stage traffic deterministically, then call ``start()``).
+
+    >>> import numpy as np
+    >>> with AsyncSortService(max_batch=4, max_delay_ms=5.0) as svc:
+    ...     futs = [svc.submit_async(np.array([3, 1, 2], np.int32))
+    ...             for _ in range(4)]
+    ...     sorted_first = [int(v) for v in futs[0].result()]
+    >>> sorted_first
+    [1, 2, 3]
+    """
+
+    def __init__(
+        self,
+        service: Optional[SortService] = None,
+        *,
+        max_batch: int = 64,
+        max_delay_ms: float = 2.0,
+        maxsize: int = 1024,
+        on_full: str = "block",
+        start: bool = True,
+        planner: Optional[Planner] = None,
+    ):
+        if on_full not in ("block", "reject"):
+            raise ValueError("on_full must be 'block' or 'reject'")
+        if max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        self.service = service if service is not None else SortService(planner=planner)
+        # widen the service's counters in place: _run_group keeps accounting
+        # into the same object, so sync and async traffic share one ledger
+        if not isinstance(self.service.stats, QueueStats):
+            self.service.stats = QueueStats(**vars(self.service.stats))
+        self.max_batch = int(max_batch)
+        self.max_delay_s = float(max_delay_ms) / 1e3
+        self.on_full = on_full
+        self._q: _stdqueue.Queue = _stdqueue.Queue(maxsize=maxsize)
+        self._pending: Dict[tuple, List[_Request]] = {}
+        self._deadlines: Dict[tuple, float] = {}
+        self._outstanding = 0
+        self._admitting = 0  # submits between their closed-check and their put
+        self._done = threading.Condition()
+        self._closed = False
+        self._stop = threading.Event()
+        self._started = False
+        self._thread = threading.Thread(
+            target=self._dispatch_loop, name="AsyncSortService", daemon=True
+        )
+        if start:
+            self.start()
+
+    # ----------------------------------------------------------- lifecycle ---
+    @property
+    def stats(self) -> QueueStats:
+        """The shared (sync + async) ``QueueStats`` ledger."""
+        return self.service.stats
+
+    def start(self) -> "AsyncSortService":
+        """Launch the dispatcher thread (idempotent)."""
+        if not self._started:
+            self._started = True
+            self._thread.start()
+        return self
+
+    def drain(self, timeout: Optional[float] = None) -> bool:
+        """Block until every admitted request has resolved (or ``timeout``
+        seconds elapse). Returns True when fully drained."""
+        deadline = None if timeout is None else time.perf_counter() + timeout
+        with self._done:
+            while self._outstanding > 0:
+                wait = None if deadline is None else deadline - time.perf_counter()
+                if wait is not None and wait <= 0:
+                    return False
+                self._done.wait(timeout=wait)
+        return True
+
+    def close(self, *, drain: bool = True) -> None:
+        """Stop accepting requests; optionally drain, then join the
+        dispatcher. Idempotent; later ``submit_async`` raises RuntimeError.
+
+        The stop signal is raised *before* draining so the dispatcher flushes
+        half-empty batches immediately instead of waiting out ``max_delay``.
+        """
+        with self._done:
+            self._closed = True
+            # wait for submits that passed the closed-check to land their
+            # put — after this, the queue's contents are final and the
+            # dispatcher (which only exits once the queue is empty) will
+            # serve every admitted request before stopping
+            while self._admitting > 0:
+                self._done.wait()
+        self._stop.set()
+        if drain:
+            self.start()  # a never-started service must still resolve backlog
+            self.drain()
+        if self._started:
+            self._thread.join(timeout=30)
+        # belt-and-braces: fail anything somehow still queued after the
+        # dispatcher has exited rather than strand its future
+        while True:
+            try:
+                item = self._q.get_nowait()
+            except _stdqueue.Empty:
+                break
+            if item.future.set_running_or_notify_cancel():
+                item.future.set_exception(RuntimeError("AsyncSortService is closed"))
+            self._mark_done(1)
+
+    def __enter__(self) -> "AsyncSortService":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -------------------------------------------------------------- submit ---
+    def submit_async(
+        self,
+        keys: np.ndarray,
+        *,
+        kind: str = "sort",
+        values: Optional[np.ndarray] = None,
+        ascending: bool = True,
+    ) -> Future:
+        """Enqueue one 1-D request; returns a Future of the same per-request
+        result ``SortService.submit`` would produce (sorted keys, argsort
+        indices, or a (keys, values) pair for kind='sort_kv').
+
+        Validation errors raise here, synchronously, on the caller's thread;
+        execution errors resolve the Future exceptionally.  With
+        ``on_full='reject'`` a full queue raises ``queue.Full``.
+        """
+        reqs, vals = self.service._validate(
+            kind, [keys], [values] if values is not None else None
+        )
+        # snapshot the caller's buffers: the dispatcher pads them up to
+        # max_delay_ms later, and an async caller may legitimately reuse or
+        # mutate its array the moment submit_async returns
+        req = np.array(reqs[0], copy=True)
+        val = np.array(vals[0], copy=True) if vals is not None else None
+        gk = self.service._group_key(req, val)
+        item = _Request((kind, bool(ascending)) + gk, req, val, time.perf_counter())
+        # the closed-check and the admission counter are one atom with
+        # respect to close(): close() flips _closed under this lock, then
+        # waits for in-flight admissions to land their put before it lets
+        # the dispatcher exit — so no put can strand behind a dead dispatcher
+        with self._done:
+            if self._closed:
+                raise RuntimeError("AsyncSortService is closed")
+            self._admitting += 1
+            self._outstanding += 1
+            self.stats.enqueued += 1
+        try:
+            self._q.put(item, block=self.on_full == "block")
+        except _stdqueue.Full:
+            with self._done:
+                self._outstanding -= 1
+                self.stats.enqueued -= 1
+                self.stats.rejected += 1
+            raise
+        finally:
+            with self._done:
+                self._admitting -= 1
+                self._done.notify_all()
+        return item.future
+
+    # ---------------------------------------------------------- dispatcher ---
+    def _dispatch_loop(self) -> None:
+        poll = 0.05
+        while not (self._stop.is_set() and self._q.empty() and not self._pending):
+            wait = poll
+            if self._pending:
+                now = time.perf_counter()
+                wait = max(0.0, min(min(self._deadlines.values()) - now, poll))
+            try:
+                item = self._q.get(timeout=wait)
+            except _stdqueue.Empty:
+                item = None
+            if item is not None:
+                group = self._pending.setdefault(item.key, [])
+                group.append(item)
+                self._deadlines.setdefault(item.key, item.t_enq + self.max_delay_s)
+                if len(group) >= self.max_batch:
+                    self._flush(item.key)
+            now = time.perf_counter()
+            for key in [k for k, d in self._deadlines.items() if d <= now]:
+                self._flush(key)
+            if self._stop.is_set() and self._q.empty():
+                for key in list(self._pending):
+                    self._flush(key)
+        for key in list(self._pending):  # safety: never strand a future
+            self._flush(key)
+
+    def _flush(self, key: tuple) -> None:
+        all_items = self._pending.pop(key, [])
+        self._deadlines.pop(key, None)
+        # a caller-cancelled future must neither run nor poison set_result
+        items = [it for it in all_items if it.future.set_running_or_notify_cancel()]
+        if len(items) < len(all_items):
+            self._mark_done(len(all_items) - len(items))
+        if not items:
+            return
+        kind, ascending = key[0], key[1]
+        reqs = [it.req for it in items]
+        vals = [it.val for it in items] if kind == "sort_kv" else None
+        t_exec = time.perf_counter()
+        try:
+            results = self.service._run_group(
+                kind, key[2:], reqs, vals, ascending=ascending
+            )
+        except Exception as e:  # execution failure -> every member future
+            for it in items:
+                it.future.set_exception(e)
+            self._mark_done(len(items))
+            return
+        with self.service._lock:
+            self.stats.observe_batch(
+                n_requests=len(items),
+                capacity=self.max_batch,
+                latencies=[t_exec - it.t_enq for it in items],
+            )
+        for it, res in zip(items, results):  # arrival order within the batch
+            it.future.set_result(res)
+        self._mark_done(len(items))
+
+    def _mark_done(self, n: int) -> None:
+        with self._done:
+            self._outstanding -= n
+            self._done.notify_all()

@@ -7,15 +7,21 @@ the ``CompiledCache``.  All padding/slicing stays in numpy so the steady-state
 hot path performs **zero** jax tracing/lowering — the property the engine
 tests assert with jax's compilation counters.
 
+The group/pad/execute core lives in ``_run_group`` so the sync ``submit``
+path and the async micro-batching queue (``repro.engine.queue``) share one
+implementation — the queue coalesces requests *across* callers into the same
+per-(bucket, dtype, kind) groups this module executes.
+
 Plans come from the ``Planner``: the per-bucket local sort recipe is the
 tuned shared-memory plan for that (bucket, dtype) cell (a serving front door
 is a single-host component; cluster plans apply to the mesh path in kv.py).
 """
 from __future__ import annotations
 
+import threading
 import time
-from dataclasses import dataclass
-from typing import Any, Dict, List, Optional, Sequence
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -35,6 +41,11 @@ _KINDS = ("sort", "argsort", "sort_kv")
 class ServiceStats:
     """Rolling counters for one ``SortService`` (requests, padding, compiles).
 
+    ``elapsed_s`` is *busy* wall time: the union of the per-batch execution
+    spans, with overlaps between concurrent submitters merged — so
+    ``throughput_keys_per_s`` stays meaningful (and ``elapsed_s`` never
+    exceeds real wall time) no matter how many threads submit at once.
+
     >>> ServiceStats(keys_in=100, elapsed_s=2.0).throughput_keys_per_s()
     50.0
     """
@@ -46,9 +57,24 @@ class ServiceStats:
     elapsed_s: float = 0.0
     compiles: int = 0
     cache_hits: int = 0
+    _busy_until: float = field(default=0.0, repr=False, compare=False)
 
     def throughput_keys_per_s(self) -> float:
         return self.keys_in / self.elapsed_s if self.elapsed_s else 0.0
+
+    def account_span(self, t0: float, t1: float) -> None:
+        """Merge one batch's [t0, t1] execution span into the busy time.
+
+        Overlapping spans (concurrent submitters) only count once — the
+        accounting is the union of intervals, not their sum.
+
+        >>> s = ServiceStats()
+        >>> s.account_span(0.0, 1.0); s.account_span(0.5, 1.5)  # overlap
+        >>> s.elapsed_s
+        1.5
+        """
+        self.elapsed_s += max(0.0, t1 - max(t0, self._busy_until))
+        self._busy_until = max(self._busy_until, t1)
 
 
 def _np_sentinel(dtype: np.dtype, *, largest: bool):
@@ -80,6 +106,9 @@ class SortService:
         self.min_bucket = min_bucket
         self.cache = CompiledCache()
         self.stats = ServiceStats()
+        # guards cache lookups/compiles and stats counters; the executable
+        # call itself runs outside it so concurrent batches still overlap
+        self._lock = threading.Lock()
 
     # ------------------------------------------------------------ builders ---
     @staticmethod
@@ -120,27 +149,18 @@ class SortService:
                 return f
         return build
 
-    # -------------------------------------------------------------- submit ---
-    def submit(
-        self,
+    # ---------------------------------------------------------- validation ---
+    @staticmethod
+    def _validate(
+        kind: str,
         requests: Sequence[np.ndarray],
-        *,
-        kind: str = "sort",
-        values: Optional[Sequence[np.ndarray]] = None,
-        ascending: bool = True,
-    ) -> List[Any]:
-        """Sort a ragged batch. Returns per-request numpy results, in order.
-
-        kind='sort'    -> sorted keys
-        kind='argsort' -> stable argsort indices
-        kind='sort_kv' -> (sorted keys, aligned values); ``values[i]`` must
-                          share ``requests[i]``'s length (extra trailing dims ok)
-        """
+        values: Optional[Sequence[np.ndarray]],
+    ) -> Tuple[List[np.ndarray], Optional[List[np.ndarray]]]:
+        """Check one ragged batch; returns (reqs, vals) as numpy arrays."""
         if kind not in _KINDS:
             raise ValueError(f"kind must be one of {_KINDS}")
         if (values is not None) != (kind == "sort_kv"):
             raise ValueError("values= is required iff kind='sort_kv'")
-        t0 = time.perf_counter()
         reqs = [np.asarray(r) for r in requests]
         vals = None
         for i, r in enumerate(reqs):
@@ -157,65 +177,122 @@ class SortService:
             for i, (r, v) in enumerate(zip(reqs, vals)):
                 if v.shape[:1] != r.shape:
                     raise ValueError(f"values[{i}] length must match request {i}")
+        return reqs, vals
 
-        # group request indices by (length bucket, dtype) — plus the value
-        # signature for sort_kv, so unrelated payload shapes never collide
-        groups: Dict[tuple, List[int]] = {}
-        for i, r in enumerate(reqs):
-            gk = (size_bucket(len(r), min_bucket=self.min_bucket), r.dtype.name)
-            if vals is not None:
-                gk += (vals[i].shape[1:], vals[i].dtype.name)
-            groups.setdefault(gk, []).append(i)
+    def _group_key(self, req: np.ndarray, val: Optional[np.ndarray] = None) -> tuple:
+        """(length bucket, dtype[, value signature]) — requests sharing this
+        key pad into one batch and run one executable."""
+        gk = (size_bucket(len(req), min_bucket=self.min_bucket), req.dtype.name)
+        if val is not None:
+            gk += (val.shape[1:], val.dtype.name)
+        return gk
 
-        out: List[Any] = [None] * len(reqs)
-        for gk, idxs in sorted(groups.items(), key=lambda kv: repr(kv[0])):
-            bucket, dtype_name = gk[0], gk[1]
-            dtype = np.dtype(dtype_name)
-            bb = size_bucket(len(idxs), min_bucket=1)  # pow2 batch bucket
-            sent = _np_sentinel(dtype, largest=ascending)
-            batch = np.full((bb, bucket), sent, dtype)
-            for row, i in enumerate(idxs):
-                batch[row, : len(reqs[i])] = reqs[i]
+    # ----------------------------------------------------------- execution ---
+    def _run_group(
+        self,
+        kind: str,
+        gk: tuple,
+        reqs: List[np.ndarray],
+        vals: Optional[List[np.ndarray]] = None,
+        *,
+        ascending: bool = True,
+    ) -> List[Any]:
+        """Pad one group (all ``reqs`` share ``gk``) and run its executable.
 
-            plan = self.planner.plan_for(bucket, dtype)
-            if plan.strategy != "shared":  # front door is single-host
-                plan = SortPlan("shared")
-            # the executable identity is exactly the plan fields this kind
-            # consumes (block_n changes the traced program for pallas plans)
-            impl, block_n, n_threads = self._plan_fields(kind, plan)
-            key = (kind, bucket, bb, dtype_name, ascending,
-                   impl, n_threads, block_n)
-            args = [jax.ShapeDtypeStruct((bb, bucket), jnp.dtype(dtype))]
+        This is the whole hot path — numpy pad, one AOT executable call,
+        numpy slice-out — shared verbatim by ``submit`` and the async queue.
+        Returns one result per request, in the given order.
+        """
+        t0 = time.perf_counter()
+        bucket, dtype_name = gk[0], gk[1]
+        dtype = np.dtype(dtype_name)
+        bb = size_bucket(len(reqs), min_bucket=1)  # pow2 batch bucket
+        sent = _np_sentinel(dtype, largest=ascending)
+        batch = np.full((bb, bucket), sent, dtype)
+        for row, r in enumerate(reqs):
+            batch[row, : len(r)] = r
 
-            if kind == "sort_kv":
-                vshape, vdtype = gk[2], np.dtype(gk[3])
-                vbatch = np.zeros((bb, bucket) + vshape, vdtype)
-                for row, i in enumerate(idxs):
-                    vbatch[row, : len(vals[i])] = vals[i]
-                key = key + (vshape, vdtype.name)
-                args.append(jax.ShapeDtypeStruct((bb, bucket) + vshape, jnp.dtype(vdtype)))
+        plan = self.planner.plan_for(bucket, dtype)
+        if plan.strategy != "shared":  # front door is single-host
+            plan = SortPlan("shared")
+        # the executable identity is exactly the plan fields this kind
+        # consumes (block_n changes the traced program for pallas plans)
+        impl, block_n, n_threads = self._plan_fields(kind, plan)
+        key = (kind, bucket, bb, dtype_name, ascending,
+               impl, n_threads, block_n)
+        args = [jax.ShapeDtypeStruct((bb, bucket), jnp.dtype(dtype))]
 
+        if kind == "sort_kv":
+            vshape, vdtype = gk[2], np.dtype(gk[3])
+            vbatch = np.zeros((bb, bucket) + vshape, vdtype)
+            for row, v in enumerate(vals):
+                vbatch[row, : len(v)] = v
+            key = key + (vshape, vdtype.name)
+            args.append(jax.ShapeDtypeStruct((bb, bucket) + vshape, jnp.dtype(vdtype)))
+
+        with self._lock:
             before = self.cache.misses
             exe = self.cache.get_or_build(key, self._builder(kind, plan, ascending), args)
             self.stats.compiles += self.cache.misses - before
             self.stats.cache_hits += int(self.cache.misses == before)
             self.stats.batches += 1
-            self.stats.padded_keys += bb * bucket - sum(len(reqs[i]) for i in idxs)
+            self.stats.padded_keys += bb * bucket - sum(len(r) for r in reqs)
 
-            if kind == "sort_kv":
-                ks, vres = exe(batch, vbatch)
-                ks, vres = np.asarray(ks), np.asarray(vres)
-                for row, i in enumerate(idxs):
-                    n = len(reqs[i])
-                    out[i] = (ks[row, :n], vres[row, :n])
-            else:
-                res = np.asarray(exe(batch))
-                for row, i in enumerate(idxs):
-                    # sentinel padding sorts last either direction, so the
-                    # leading n entries (indices < n for argsort) are the answer
-                    out[i] = res[row, : len(reqs[i])]
+        out: List[Any] = [None] * len(reqs)
+        if kind == "sort_kv":
+            ks, vres = exe(batch, vbatch)
+            ks, vres = np.asarray(ks), np.asarray(vres)
+            for row, r in enumerate(reqs):
+                n = len(r)
+                out[row] = (ks[row, :n], vres[row, :n])
+        else:
+            res = np.asarray(exe(batch))
+            for row, r in enumerate(reqs):
+                # sentinel padding sorts last either direction, so the
+                # leading n entries (indices < n for argsort) are the answer
+                out[row] = res[row, : len(r)]
 
-        self.stats.requests += len(reqs)
-        self.stats.keys_in += sum(len(r) for r in reqs)
-        self.stats.elapsed_s += time.perf_counter() - t0
+        t1 = time.perf_counter()
+        with self._lock:
+            self.stats.requests += len(reqs)
+            self.stats.keys_in += sum(len(r) for r in reqs)
+            self.stats.account_span(t0, t1)
+        return out
+
+    # -------------------------------------------------------------- submit ---
+    def submit(
+        self,
+        requests: Sequence[np.ndarray],
+        *,
+        kind: str = "sort",
+        values: Optional[Sequence[np.ndarray]] = None,
+        ascending: bool = True,
+    ) -> List[Any]:
+        """Sort a ragged batch. Returns per-request numpy results, in order.
+
+        kind='sort'    -> sorted keys
+        kind='argsort' -> stable argsort indices
+        kind='sort_kv' -> (sorted keys, aligned values); ``values[i]`` must
+                          share ``requests[i]``'s length (extra trailing dims ok)
+        """
+        reqs, vals = self._validate(kind, requests, values)
+
+        # group request indices by (length bucket, dtype) — plus the value
+        # signature for sort_kv, so unrelated payload shapes never collide
+        groups: Dict[tuple, List[int]] = {}
+        for i, r in enumerate(reqs):
+            gk = self._group_key(r, vals[i] if vals is not None else None)
+            groups.setdefault(gk, []).append(i)
+
+        out: List[Any] = [None] * len(reqs)
+        for gk, idxs in sorted(groups.items(), key=lambda kv: repr(kv[0])):
+            results = self._run_group(
+                kind,
+                gk,
+                [reqs[i] for i in idxs],
+                [vals[i] for i in idxs] if vals is not None else None,
+                ascending=ascending,
+            )
+            for i, res in zip(idxs, results):
+                out[i] = res
         return out

@@ -4,9 +4,15 @@ Greedy/temperature sampling over the vocab-parallel logits; the decode loop
 uses the serving top-k from the sort engine (repro.engine.topk, a stable
 descending argsort) — the serving-path integration from DESIGN.md §3.
 
+``--topk-queue`` routes each row's top-k through the async micro-batching
+queue instead (repro.engine.AsyncSortService): every row is an independent
+single-request producer, and the queue coalesces them back into one
+executable call per step — the serving shape docs/serving.md describes,
+with queue stats printed at exit.
+
 Usage:
   python -m repro.launch.serve --arch qwen3-0.6b --reduced --batch 4 \
-      --prompt-len 32 --gen 16
+      --prompt-len 32 --gen 16 [--topk-queue]
 """
 from __future__ import annotations
 
@@ -23,12 +29,28 @@ from repro.models.transformer import ShardCtx, model_init
 from repro.train.steps import prefill_step, serve_decode_step
 
 
-def sample_next(logits: jax.Array, key, *, temperature: float, top_k: int):
+def sample_next(logits: jax.Array, key, *, temperature: float, top_k: int,
+                queue=None):
     """(B, V) logits -> (B,) token ids. top_k via the engine's stable argsort
-    (same tie behaviour as lax.top_k; the serving-path integration)."""
-    if temperature <= 0:
-        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    vals, idx = topk(logits, top_k)
+    (same tie behaviour as lax.top_k; the serving-path integration).
+
+    With ``queue=`` (an ``AsyncSortService``) each row becomes one
+    ``submit_async(kind='argsort', ascending=False)`` request; the queue
+    coalesces the B rows into a single executable call per decode step.
+    """
+    if queue is not None:
+        rows = np.asarray(logits, np.float32)
+        futs = [queue.submit_async(r, kind="argsort", ascending=False)
+                for r in rows]
+        order = np.stack([np.asarray(f.result())[:top_k] for f in futs])
+        idx = jnp.asarray(order.astype(np.int32))
+        if temperature <= 0:
+            return idx[:, 0]
+        vals = jnp.take_along_axis(jnp.asarray(rows), idx, axis=1)
+    else:
+        if temperature <= 0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        vals, idx = topk(logits, top_k)
     probs = jax.nn.softmax(vals / temperature, axis=-1)
     choice = jax.random.categorical(key, jnp.log(jnp.maximum(probs, 1e-20)))
     return jnp.take_along_axis(idx, choice[:, None], axis=1)[:, 0].astype(jnp.int32)
@@ -44,7 +66,15 @@ def main(argv=None):
     ap.add_argument("--temperature", type=float, default=0.8)
     ap.add_argument("--top-k", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--topk-queue", action="store_true",
+                    help="route per-row top-k through the AsyncSortService "
+                         "micro-batching queue (docs/serving.md)")
     args = ap.parse_args(argv)
+
+    qsvc = None
+    if args.topk_queue:
+        from repro.engine import AsyncSortService
+        qsvc = AsyncSortService(max_batch=args.batch, max_delay_ms=2.0)
 
     cfg = ARCHS[args.arch]
     if args.reduced:
@@ -74,13 +104,15 @@ def main(argv=None):
 
     decode = jax.jit(lambda p, t, c: serve_decode_step(p, cfg, t, c, ctx=ctx))
     out_tokens = []
-    tok = sample_next(logits, key, temperature=args.temperature, top_k=args.top_k)
+    tok = sample_next(logits, key, temperature=args.temperature,
+                      top_k=args.top_k, queue=qsvc)
     out_tokens.append(tok)
     t0 = time.time()
     for i in range(args.gen - 1):
         key, sub = jax.random.split(key)
         lg, cache = decode(params, tok[:, None], cache)
-        tok = sample_next(lg[:, 0], sub, temperature=args.temperature, top_k=args.top_k)
+        tok = sample_next(lg[:, 0], sub, temperature=args.temperature,
+                          top_k=args.top_k, queue=qsvc)
         out_tokens.append(tok)
     jax.block_until_ready(tok)
     t_decode = time.time() - t0
@@ -89,6 +121,13 @@ def main(argv=None):
     print(f"arch={cfg.name} batch={args.batch} prompt={args.prompt_len} gen={args.gen}")
     print(f"prefill {t_prefill*1e3:.1f} ms; decode {t_decode/max(args.gen-1,1)*1e3:.2f} ms/tok")
     print("sampled token ids (first row):", gen[0][:16].tolist())
+    if qsvc is not None:
+        qsvc.close()
+        qs = qsvc.stats
+        pct = qs.latency_percentiles()
+        print(f"sort-queue: batches={qs.coalesced_batches} "
+              f"fill={qs.fill_ratio():.2f} compiles={qs.compiles} "
+              f"queue p50={pct[50]*1e3:.2f} ms p99={pct[99]*1e3:.2f} ms")
     assert gen.min() >= 0 and gen.max() < cfg.vocab_size, "pad-vocab leak!"
     return gen
 

@@ -43,6 +43,18 @@ class strategies:
         )
 
     @staticmethod
+    def sampled_from(elements):
+        elements = list(elements)
+        return _Strategy(
+            lambda rng: elements[int(rng.integers(0, len(elements)))],
+            lambda: elements[0],
+        )
+
+    @staticmethod
+    def booleans():
+        return _Strategy(lambda rng: bool(rng.integers(0, 2)), lambda: False)
+
+    @staticmethod
     def lists(elements, *, min_size=0, max_size=10):
         return _Strategy(
             lambda rng: [

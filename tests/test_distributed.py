@@ -271,3 +271,53 @@ def test_elastic_rescale_checkpoint():
             assert np.isfinite(float(m["loss"]))
             print("phase2 (8-dev) resumed at step", s, "loss", float(m["loss"]))
         """)
+
+
+def test_cluster_sort_overflow_retry_recovers_losslessly():
+    """Model-D regression: a skewed key distribution that overflows the
+    slab_geometry capacity must (a) surface the overflow when retries are
+    disabled and (b) recover losslessly through the documented
+    double-capacity retry — for both cluster_sort and the kv twin."""
+    run_with_devices("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core.cluster_sort import cluster_sort, slab_geometry
+        from repro.engine import cluster_sort_kv
+
+        mesh = jax.make_mesh((8,), ("x",))
+        n, P = 1024, 8
+        m = n // P
+        rng = np.random.default_rng(0)
+        # every key lands in range-bucket 0 of [0, 8000): per-sender counts
+        # for that bucket are m, far beyond the provisioned capacity
+        x = rng.integers(0, 1000, n).astype(np.int32)
+        _, _, cap = slab_geometry("range", m, P, 2.0)
+        assert cap < m, (cap, m)  # the skew really does exceed capacity
+        kw = dict(mode="range", lo=0, hi=8000)
+
+        try:
+            cluster_sort(jnp.asarray(x), mesh, "x", max_retries=0, **kw)
+            raise SystemExit("expected capacity-overflow RuntimeError")
+        except RuntimeError as e:
+            assert "overflow" in str(e)
+
+        # default retries: capacity doubles until cap == m (loss-free bound)
+        slab, valid = cluster_sort(jnp.asarray(x), mesh, "x", **kw)
+        got = np.asarray(slab)[np.asarray(valid)]
+        assert got.shape == (n,), got.shape      # nothing dropped
+        assert (got == np.sort(x)).all()         # nothing corrupted
+
+        # the kv twin retries too, carrying its payload losslessly
+        v = np.arange(n, dtype=np.int32)
+        try:
+            cluster_sort_kv(jnp.asarray(x), jnp.asarray(v), mesh, "x",
+                            max_retries=0, **kw)
+            raise SystemExit("expected kv capacity-overflow RuntimeError")
+        except RuntimeError as e:
+            assert "overflow" in str(e)
+        ref = np.argsort(x, kind="stable")
+        sk, sv, valid = cluster_sort_kv(jnp.asarray(x), jnp.asarray(v),
+                                        mesh, "x", **kw)
+        sk, sv = np.asarray(sk)[np.asarray(valid)], np.asarray(sv)[np.asarray(valid)]
+        assert (sk == x[ref]).all() and (sv == ref).all()
+        print("overflow retry ok")
+    """)

@@ -311,3 +311,56 @@ def test_size_bucket_pow2():
     assert size_bucket(1000) == 1024
     assert size_bucket(1024) == 1024
     assert size_bucket(3, min_bucket=8) == 8
+
+
+# ------------------------------------------------------ plan-cache robustness ---
+def test_planner_load_graceful_on_corrupt_or_unknown_cache(tmp_path):
+    """A serving process must never die because its tuned-plans file rotted:
+    corrupt/truncated/unknown-schema caches warn and fall back to the
+    default-plan rule instead of raising."""
+    import json
+    import warnings
+
+    bad_files = {
+        "corrupt.json": "{this is not json",
+        "truncated.json": '{"version": 1, "plans": {"4096|int32|x": {"strat',
+        "badversion.json": '{"version": 99, "plans": {}}',
+        "notadict.json": '{"version": 1, "plans": {"k": ["not", "a", "dict"]}}',
+        "badstrategy.json": '{"version": 1, "plans": {"k": {"strategy": "warp"}}}',
+        "noplans.json": '{"version": 1}',
+        "plansnotobj.json": '{"version": 1, "plans": 7}',
+    }
+    for name, content in bad_files.items():
+        p = tmp_path / name
+        p.write_text(content)
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            planner = Planner(str(p))
+        assert planner.plans == {}, name
+        assert any("plan cache" in str(x.message) for x in w), name
+        # lookups fall back to the default rule, not an exception
+        assert planner.plan_for(1000, jnp.int32).strategy == "shared", name
+
+    # unknown *extra fields* in an otherwise valid entry are forward-compat:
+    # the known fields load, the unknown ones are ignored
+    fwd = tmp_path / "forward.json"
+    fwd.write_text(json.dumps({
+        "version": 1,
+        "plans": {plan_key(4096, jnp.int32): {
+            "strategy": "shared", "local_impl": "xla", "from_the_future": 1,
+        }},
+    }))
+    assert Planner(str(fwd)).lookup(4096, jnp.int32).local_impl == "xla"
+
+    # a live re-load of a rotted file keeps the last-known-good plans
+    # instead of wiping the table a serving process is already using
+    survivor = Planner(str(fwd))
+    assert survivor.plans
+    with warnings.catch_warnings(record=True):
+        warnings.simplefilter("always")
+        survivor.load(str(tmp_path / "corrupt.json"))
+    assert survivor.lookup(4096, jnp.int32).local_impl == "xla"
+
+    # tooling that *writes* plan caches wants the error, not the fallback
+    with pytest.raises(Exception):
+        Planner().load(str(tmp_path / "corrupt.json"), strict=True)

@@ -29,6 +29,17 @@ def test_serve_driver_end_to_end():
     assert gen.shape == (2, 4)
 
 
+def test_serve_driver_topk_queue_matches_direct_path():
+    """--topk-queue (per-row argsort through AsyncSortService) samples the
+    same tokens as the direct engine.topk path — same seed, same model."""
+    args = ["--arch", "qwen3-0.6b", "--reduced", "--batch", "2",
+            "--prompt-len", "12", "--gen", "4"]
+    direct = serve_main(args)
+    queued = serve_main(args + ["--topk-queue"])
+    assert queued.shape == (2, 4)
+    assert (queued == direct).all()
+
+
 def test_collective_parser_on_real_hlo():
     """Loop-aware accounting: a psum inside a scan counts trip_count times."""
     from jax.sharding import PartitionSpec as P

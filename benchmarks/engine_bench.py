@@ -57,6 +57,13 @@ def serving_rows(rng, *, reps: int, smoke: bool):
 
     svc = SortService()
     svc.submit(reqs)  # warmup: compiles the (n_req, bucket) executable
+    # warm every pow2 batch-size bucket too: the queue's deadline flushes
+    # produce partial batches, and a cold compile landing inside a timed
+    # loop would swamp the ms-scale queue overhead these rows measure
+    bb = 1
+    while bb < n_req:
+        svc.submit(reqs[:bb])
+        bb *= 2
     t0 = time.perf_counter()
     for _ in range(reps):
         svc.submit(reqs)
@@ -85,6 +92,30 @@ def serving_rows(rng, *, reps: int, smoke: bool):
         f"vs_sync={dt / dt_async:.2f}x",
     ))
     asvc.close()
+
+    # adaptive flush window (DelayController): same traffic, the window
+    # shrinks as batches fill early — the derived column shows where it
+    # settled and what the adaptation paid/earned vs the fixed window
+    adsvc = AsyncSortService(svc, max_batch=n_req, max_delay_ms=2.0,
+                             min_delay_ms=0.05)
+    for f in [adsvc.submit_async(r) for r in reqs]:
+        f.result()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        futs = [adsvc.submit_async(r) for r in reqs]
+        for f in futs:
+            f.result()
+    dt_ad = (time.perf_counter() - t0) / reps
+    ctl = adsvc.delay
+    rows.append((
+        f"engine/serving_async_adaptive/n={req_len}x{n_req}",
+        dt_ad * 1e6,
+        f"keys_per_s={keys_total / dt_ad:.0f};"
+        f"delay_ms={ctl.delay_ms:.3f};shrinks={ctl.shrinks};"
+        f"grows={ctl.grows};arrival_rate={ctl.arrival_rate():.0f}/s;"
+        f"vs_fixed_async={dt_async / dt_ad:.2f}x",
+    ))
+    adsvc.close()
     return rows
 
 

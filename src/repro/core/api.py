@@ -6,7 +6,10 @@
                                     one device, model D on a mesh)
 ``sort(x, mesh=..., axis=...)``  -> model D cluster sort (production path)
 ``strategy=`` overrides: 'shared' / 'shared_hybrid' (B), 'shared_merge' (A),
-'distributed_merge' (C), 'cluster' (D) — these bypass the planner entirely.
+'distributed_merge' (C), 'cluster' (D) — these bypass the planner's plan
+*selection*. Cluster runs on a mesh still close the capacity-learning loop
+through the default planner (learned ``capacity_factor`` + telemetry) unless
+``capacity_factor=`` / ``telemetry=`` are passed explicitly.
 ``local_impl=`` / ``block_n=`` further override the per-partition sequential
 sort of whichever plan is selected (e.g. ``local_impl='pallas'`` routes every
 local sort through the VMEM-tiled Pallas kernel).
@@ -43,6 +46,13 @@ def sort(
     the paper's hard-coded rule.  ``local_impl=`` / ``block_n=`` rewrite the
     selected plan's local-sort fields whichever way it was chosen.
 
+    Cluster plans close the capacity-learning loop by default: the call
+    reports its exchange telemetry to the default planner and runs at that
+    planner's learned ``capacity_factor`` for this (size, dtype, mesh) cell,
+    so a workload that overflowed once never pays the overflow-retry
+    recompile again (pass ``capacity_factor=`` or ``telemetry=`` explicitly
+    to opt out — see repro.engine.adapt).
+
     >>> import jax.numpy as jnp
     >>> [int(v) for v in sort(jnp.array([3, 1, 2]))]
     [1, 2, 3]
@@ -69,4 +79,20 @@ def sort(
         plan = replace(plan, local_impl=local_impl)
     if block_n is not None:
         plan = replace(plan, block_n=block_n)
+    if (
+        plan.strategy == "cluster"
+        and mesh is not None
+        and "capacity_factor" not in kwargs
+        and "telemetry" not in kwargs
+    ):
+        # close the feedback loop: run at the learned capacity factor and
+        # report this call's exchange telemetry back to the planner.  An
+        # explicit capacity_factor= or telemetry= opts out of the WHOLE
+        # loop — a pinned experiment must neither read nor mutate the
+        # process-wide learned state
+        kwargs.update(
+            default_planner().cluster_kwargs(
+                x.shape[-1], x.dtype, mesh, default=plan.capacity_factor
+            )
+        )
     return run_plan(plan, x, mesh=mesh, axis=axis, ascending=ascending, **kwargs)

@@ -23,6 +23,7 @@ framework.
 """
 from __future__ import annotations
 
+import threading
 from dataclasses import dataclass
 from functools import lru_cache, partial
 from typing import Any, Callable, Optional
@@ -253,6 +254,78 @@ def slab_geometry(mode: str, m: int, P_: int, capacity_factor: float):
     return part_buckets, n_buckets, cap
 
 
+# serializes the (miss-count snapshot, memoized construction) pairs inside
+# run_with_capacity_retries so concurrent callers never attribute each
+# other's cache misses to their own telemetry; construction is cheap (the
+# jit wrapper — actual compilation happens at call time, outside the lock)
+_RECOMPILE_COUNT_LOCK = threading.Lock()
+
+
+def run_with_capacity_retries(
+    make_fn: Callable[[int], Callable],
+    run_fn: Callable[[Callable], tuple],
+    *,
+    m: int,
+    P_: int,
+    part_buckets: int,
+    cap: int,
+    max_retries: int,
+    telemetry: Optional[Callable[..., None]],
+    lru,
+    label: str,
+):
+    """Shared capacity-doubling retry driver for the cluster sorts.
+
+    ``make_fn(cap)`` returns the compiled shard_map for one capacity (an
+    ``lru_cache``-memoized factory — ``lru`` is that factory, used to count
+    retry-forced fresh compilations); ``run_fn(fn)`` executes it and returns
+    ``(*outputs, counts, peak, overflow)``.  On success returns
+    ``(outputs, valid)`` where ``valid`` masks the real slab entries; on
+    persistent overflow raises ``RuntimeError``.  Either way the final
+    attempt's telemetry (peak per-(sender, bucket) count, overflow/retry/
+    recompile events) is reported through ``telemetry`` — the feedback
+    ``repro.engine.adapt`` turns into learned capacity factors.
+    """
+    retries, peak, recompiles = 0, 0, 0
+
+    def report(overflowed: bool) -> None:
+        if telemetry is not None:
+            telemetry(
+                m=m,
+                part_buckets=part_buckets,
+                capacity=cap,
+                peak=peak,
+                overflowed=overflowed,
+                retries=retries,
+                recompiles=recompiles,
+            )
+
+    for attempt in range(max_retries + 1):
+        if attempt:
+            cap = min(m, cap * 2)
+        with _RECOMPILE_COUNT_LOCK:
+            misses0 = lru.cache_info().misses
+            fn = make_fn(cap)
+            fresh = lru.cache_info().misses - misses0
+        if attempt:
+            # only retry attempts count: a first-call warmup compile is the
+            # normal cost of a new config, not an overflow-forced recompile
+            recompiles += fresh
+        *outs, counts, att_peak, overflow = run_fn(fn)
+        peak = max(peak, int(att_peak))
+        retries = attempt
+        if not bool(overflow):
+            report(overflowed=attempt > 0)
+            C_total = outs[0].shape[0] // P_
+            pos = jnp.arange(outs[0].shape[0]) % C_total
+            valid = pos < jnp.repeat(counts, C_total)
+            return outs, valid
+        if cap >= m:
+            break  # already loss-free capacity; more retries can't help
+    report(overflowed=True)
+    raise RuntimeError(f"{label}: capacity overflow persisted after retries")
+
+
 def cluster_sort_local(
     local: jax.Array,
     axis_name: str,
@@ -264,10 +337,12 @@ def cluster_sort_local(
     block_n: Optional[int] = None,
 ):
     """shard_map body for model D. local: (m,) shard. Returns
-    (sorted_slab (B/P*C per shard,), my_count, overflow): entries
+    (sorted_slab (B/P*C per shard,), my_count, peak, overflow): entries
     [0, my_count) of the slab are this shard's contiguous range of the
-    globally sorted output. ``n_buckets`` must be a multiple of the axis
-    size; the contiguous bucket -> shard map keeps global order
+    globally sorted output; ``peak`` is the mesh-wide max per-(sender,
+    bucket) element count — the exchange-telemetry signal capacity learning
+    feeds on (repro.engine.adapt). ``n_buckets`` must be a multiple of the
+    axis size; the contiguous bucket -> shard map keeps global order
     (DESIGN.md §2)."""
     P_ = jax.lax.axis_size(axis_name)
     idx = jax.lax.axis_index(axis_name)
@@ -280,7 +355,8 @@ def cluster_sort_local(
     global_counts = jax.lax.psum(ex.counts, axis_name)  # (n_buckets,)
     owner = (jnp.arange(n_buckets, dtype=jnp.int32) * P_) // n_buckets
     my_count = jnp.sum(jnp.where(owner == idx, global_counts, 0)).astype(jnp.int32)
-    return sorted_slab, my_count[None], ex.overflow
+    peak = jax.lax.pmax(jnp.max(ex.counts), axis_name)
+    return sorted_slab, my_count[None], peak, ex.overflow
 
 
 @lru_cache(maxsize=256)
@@ -305,7 +381,7 @@ def _compiled_cluster_sort(
     )
     return jax.jit(
         jax.shard_map(
-            body, mesh=mesh, in_specs=P(axis), out_specs=(P(axis), P(axis), P())
+            body, mesh=mesh, in_specs=P(axis), out_specs=(P(axis), P(axis), P(), P())
         )
     )
 
@@ -323,6 +399,7 @@ def cluster_sort(
     local_impl: str = "xla",
     block_n: Optional[int] = None,
     max_retries: int = 4,
+    telemetry: Optional[Callable[..., None]] = None,
 ):
     """Sort 1-D ``x`` across ``mesh[axis]`` with the paper's cluster algorithm.
 
@@ -331,6 +408,14 @@ def cluster_sort(
     masks real entries. Retries with doubled capacity on overflow (the
     fault-tolerant wrapper promised in DESIGN.md §2). ``block_n`` tunes
     ``local_impl='pallas'``.
+
+    ``telemetry`` is an optional callback invoked once per call (including a
+    failing one) with keyword args ``m``, ``part_buckets``, ``capacity``
+    (final attempt), ``peak`` (max per-(sender, bucket) count observed),
+    ``overflowed``, ``retries``, and ``recompiles`` (fresh executables the
+    capacity-doubling retries forced — a first-call warmup compile doesn't
+    count) — the feedback ``repro.engine.adapt`` turns into learned
+    capacity factors.
     """
     P_ = mesh.shape[axis]
     n = x.shape[-1]
@@ -339,16 +424,19 @@ def cluster_sort(
     m = n // P_
     part_buckets, n_buckets, cap = slab_geometry(mode, m, P_, capacity_factor)
 
-    for _ in range(max_retries + 1):
-        fn = _compiled_cluster_sort(
-            mesh, axis, mode, cap, part_buckets, n_buckets, digits, lo, hi, local_impl,
-            block_n,
-        )
-        slab, counts, overflow = fn(x)
-        if not bool(overflow):
-            C_total = slab.shape[0] // P_
-            pos = jnp.arange(slab.shape[0]) % C_total
-            valid = pos < jnp.repeat(counts, C_total)
-            return slab, valid
-        cap = min(m, cap * 2)
-    raise RuntimeError("cluster_sort: capacity overflow persisted after retries")
+    (slab,), valid = run_with_capacity_retries(
+        lambda c: _compiled_cluster_sort(
+            mesh, axis, mode, c, part_buckets, n_buckets, digits, lo, hi,
+            local_impl, block_n,
+        ),
+        lambda fn: fn(x),
+        m=m,
+        P_=P_,
+        part_buckets=part_buckets,
+        cap=cap,
+        max_retries=max_retries,
+        telemetry=telemetry,
+        lru=_compiled_cluster_sort,
+        label="cluster_sort",
+    )
+    return slab, valid

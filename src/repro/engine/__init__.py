@@ -1,7 +1,11 @@
 """repro.engine — autotuned sort-plan engine (serving-grade front end).
 
 planner  : SortPlan + autotuner + persistent JSON plan cache; candidate
-           sweep covers local_impl='pallas' with a tuned block_n grid
+           sweep covers local_impl='pallas' with a tuned block_n grid;
+           folds learned capacity factors into cluster plans
+adapt    : closed-loop tuning — ExchangeTelemetry + CapacityLearner turn
+           observed model-D overflow into learned capacity factors, and
+           DelayController adapts the async flush window to arrival rate
 cache    : compiled-executable cache with pow2 shape bucketing
 kv       : sort_kv / argsort / sort_pairs / topk — records, not just keys
            (impl='pallas' runs the kernels' stable (key, rank) network)
@@ -11,6 +15,14 @@ queue    : AsyncSortService — async request queue that micro-batches
 
 See docs/architecture.md for the layer map and request lifecycle.
 """
+from .adapt import (
+    CapacityLearner,
+    DelayController,
+    ExchangeObservation,
+    ExchangeTelemetry,
+    LearnedCapacity,
+    ManualClock,
+)
 from .cache import CompiledCache, size_bucket
 from .kv import argsort, cluster_sort_kv, sort_kv, sort_pairs, topk
 from .planner import (
@@ -27,6 +39,12 @@ from .queue import AsyncSortService, QueueStats
 from .service import ServiceStats, SortService
 
 __all__ = [
+    "CapacityLearner",
+    "DelayController",
+    "ExchangeObservation",
+    "ExchangeTelemetry",
+    "LearnedCapacity",
+    "ManualClock",
     "CompiledCache",
     "size_bucket",
     "argsort",

@@ -1,0 +1,321 @@
+"""Closed-loop adaptive tuning — learn knobs from observed runtime behaviour.
+
+Two feedback loops, both deterministic and clock-injectable:
+
+**Capacity learning** (model D).  ``cluster_sort`` / ``cluster_sort_kv``
+re-learn slab capacity the hard way on every call: overflow, double
+``capacity_factor``, recompile, retry — then throw the lesson away.  Here
+every call reports an ``ExchangeObservation`` (max observed per-(src, dst)
+bucket count, overflow/retry/recompile events) into an
+``ExchangeTelemetry`` ledger keyed by plan-cache cell, and a
+``CapacityLearner`` folds the history into a learned ``capacity_factor``:
+jump to ``observed peak x safety margin`` the moment a call needs more than
+the current factor, decay geometrically back toward the default while
+traffic stays mild.  The ``Planner`` persists the learned factors through
+its JSON plan cache, so a restarted serving process sizes slabs right on
+the **first** compile — zero overflow-retry recompiles in steady state.
+
+**Adaptive flush window** (async serving).  ``DelayController`` owns the
+``AsyncSortService`` coalescing deadline: it tracks rolling arrival rate
+and per-flush fill ratio, shrinks the window when batches fill before the
+deadline (the queue is adding latency for no extra fill), and grows it when
+deadline flushes run sparse (a longer wait would amortize better) — always
+within ``[min_delay_ms, max_delay_ms]``.
+
+Every decision consumes an injectable monotonic ``clock`` (``ManualClock``
+for tests), so adaptation is reproducible step by step — no wall-clock
+dependence anywhere in the loop.  See docs/serving.md and
+docs/plan-cache.md for how the pieces wire together.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from dataclasses import asdict, dataclass
+from typing import Callable, Dict, Optional
+
+__all__ = [
+    "CapacityLearner",
+    "DelayController",
+    "ExchangeObservation",
+    "ExchangeTelemetry",
+    "LearnedCapacity",
+    "ManualClock",
+]
+
+
+class ManualClock:
+    """Deterministic monotonic clock for tests and doctests.
+
+    Inject it wherever a ``clock=`` is accepted; time only moves when the
+    test calls ``advance``, so every timing decision replays exactly.
+
+    >>> clock = ManualClock()
+    >>> clock()
+    0.0
+    >>> clock.advance(1.5)
+    1.5
+    >>> clock()
+    1.5
+    """
+
+    def __init__(self, t: float = 0.0):
+        self.t = float(t)
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> float:
+        """Move time forward by ``dt`` seconds (never backward)."""
+        if dt < 0:
+            raise ValueError("a monotonic clock cannot go backward")
+        self.t += dt
+        return self.t
+
+
+@dataclass(frozen=True)
+class ExchangeObservation:
+    """One ``cluster_sort``/``cluster_sort_kv`` call's exchange telemetry.
+
+    ``peak`` is the max per-(sender, bucket) element count observed across
+    the mesh — the quantity slab capacity must cover.  ``required_factor``
+    converts it back into the smallest ``capacity_factor`` whose
+    ``slab_geometry`` capacity would have fit the call without overflow.
+
+    >>> obs = ExchangeObservation(m=128, part_buckets=8, capacity=32,
+    ...                           peak=48, overflowed=True, retries=1)
+    >>> obs.required_factor()
+    3.0
+    """
+
+    m: int                  # per-shard element count
+    part_buckets: int       # buckets the partitioner emits
+    capacity: int           # slab capacity of the final (successful) attempt
+    peak: int               # max per-(src, dst) bucket count seen
+    overflowed: bool        # any attempt overflowed
+    retries: int            # capacity-doubling retries this call paid
+    recompiles: int = 0     # fresh executables those retries compiled
+
+    def required_factor(self) -> float:
+        """Smallest ``capacity_factor`` that fits ``peak`` without overflow."""
+        return self.peak * self.part_buckets / max(self.m, 1)
+
+
+class ExchangeTelemetry:
+    """Thread-safe ledger of exchange observations, keyed by plan-cache cell.
+
+    Keeps a bounded rolling window of observations per key plus lifetime
+    totals (calls, overflow events, retries, recompiles) so long-lived
+    serving processes report recent behaviour and cumulative cost.
+
+    >>> led = ExchangeTelemetry()
+    >>> led.record("4096|int32|local/cpu", ExchangeObservation(
+    ...     m=128, part_buckets=8, capacity=32, peak=48,
+    ...     overflowed=True, retries=1))
+    >>> led.last("4096|int32|local/cpu").retries
+    1
+    >>> led.overflow_events, led.total_retries
+    (1, 1)
+    """
+
+    def __init__(self, window: int = 256):
+        self._window = window
+        self._obs: Dict[str, deque] = {}
+        self._lock = threading.Lock()
+        self.calls = 0
+        self.overflow_events = 0
+        self.total_retries = 0
+        self.total_recompiles = 0
+
+    def record(self, key: str, obs: ExchangeObservation) -> None:
+        with self._lock:
+            self._obs.setdefault(key, deque(maxlen=self._window)).append(obs)
+            self.calls += 1
+            self.overflow_events += int(obs.overflowed)
+            self.total_retries += obs.retries
+            self.total_recompiles += obs.recompiles
+
+    def last(self, key: str) -> Optional[ExchangeObservation]:
+        """Most recent observation for ``key`` (None before any call)."""
+        with self._lock:
+            window = self._obs.get(key)
+            return window[-1] if window else None
+
+    def peak_factor(self, key: str) -> float:
+        """Largest ``required_factor`` in ``key``'s rolling window (0.0 if
+        the key has never been observed)."""
+        with self._lock:
+            window = self._obs.get(key, ())
+            return max((o.required_factor() for o in window), default=0.0)
+
+    def keys(self):
+        with self._lock:
+            return sorted(self._obs)
+
+
+@dataclass(frozen=True)
+class LearnedCapacity:
+    """One plan-cache cell's learned capacity state (persisted as JSON).
+
+    >>> LearnedCapacity.from_dict(
+    ...     LearnedCapacity(3.75, 3.0, 7).to_dict()).capacity_factor
+    3.75
+    """
+
+    capacity_factor: float   # the factor the planner now hands out
+    peak_factor: float       # largest required_factor ever observed (audit)
+    observations: int        # how many calls fed this cell
+
+    def to_dict(self) -> dict:
+        return asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "LearnedCapacity":
+        return cls(
+            capacity_factor=float(d["capacity_factor"]),
+            peak_factor=float(d.get("peak_factor", 0.0)),
+            observations=int(d.get("observations", 0)),
+        )
+
+
+@dataclass(frozen=True)
+class CapacityLearner:
+    """Capacity-factor policy: jump up on pressure, decay toward default.
+
+    For each observation the *target* factor is the observed requirement
+    times ``margin`` (clamped to ``[default, max_factor]``).  A target at or
+    above the current learned factor is adopted immediately — overflow costs
+    a retry and a recompile, so under-provisioning is the expensive error.
+    A lower target decays the learned factor geometrically toward the
+    default, never dropping below the target itself, so one burst of skew
+    doesn't pin peak slab memory forever.
+
+    Invariants (property-tested in tests/test_adapt.py): the learned factor
+    always stays within ``[default, max_factor]`` and never exceeds the
+    largest ``target`` the history produced — it cannot oscillate past
+    observed peak x margin.
+
+    >>> lrn = CapacityLearner(margin=1.25, decay=0.5)
+    >>> obs = ExchangeObservation(m=128, part_buckets=8, capacity=32,
+    ...                           peak=48, overflowed=True, retries=1)
+    >>> cf = lrn.update(2.0, obs, default=2.0)   # 3.0 required -> 3.75
+    >>> cf
+    3.75
+    >>> calm = ExchangeObservation(m=128, part_buckets=8, capacity=60,
+    ...                            peak=16, overflowed=False, retries=0)
+    >>> lrn.update(cf, calm, default=2.0)        # halfway back toward 2.0
+    2.875
+    """
+
+    margin: float = 1.25
+    decay: float = 0.5
+    max_factor: float = 64.0
+    snap_eps: float = 1e-3
+
+    def target(self, obs: ExchangeObservation, *, default: float) -> float:
+        """observed requirement x margin, clamped to [default, max_factor]."""
+        return min(self.max_factor, max(default, obs.required_factor() * self.margin))
+
+    def update(
+        self, learned: float, obs: ExchangeObservation, *, default: float
+    ) -> float:
+        t = self.target(obs, default=default)
+        if t >= learned:
+            return t
+        # geometric decay toward default, floored at the current target so a
+        # steady skew level holds its learned factor instead of oscillating;
+        # within snap_eps of the default the decay lands exactly on it, so
+        # the walk terminates (and stops dirtying the persisted plan cache) —
+        # guarded on t == default so the snap can never undershoot a target
+        decayed = max(t, default + (learned - default) * self.decay)
+        if t <= default and decayed - default < self.snap_eps:
+            return default
+        return decayed
+
+
+class DelayController:
+    """Adaptive coalescing window for ``AsyncSortService``.
+
+    Owns the effective ``max_delay`` within ``[min_delay_ms, max_delay_ms]``:
+    a batch that fills to ``capacity`` *before* its deadline shrinks the
+    window (waiting longer buys no fill, only latency); a deadline flush
+    below ``target_fill`` grows it (the arrival rate needs a longer window
+    to amortize).  Flushes between those regimes — and lifecycle flushes at
+    close — leave the window unchanged.  All timing flows through the
+    injectable ``clock``, so every decision replays deterministically.
+
+    >>> ctl = DelayController(1.0, 8.0, clock=ManualClock())
+    >>> ctl.delay_ms                                     # starts patient
+    8.0
+    >>> ctl.observe_flush(n_requests=8, capacity=8, deadline_hit=False)
+    >>> ctl.delay_ms                                     # filled early: shrink
+    4.0
+    >>> ctl.observe_flush(n_requests=1, capacity=8, deadline_hit=True)
+    >>> ctl.delay_ms                                     # flushed sparse: grow
+    6.0
+    """
+
+    def __init__(
+        self,
+        min_delay_ms: float,
+        max_delay_ms: float,
+        *,
+        clock: Callable[[], float] = time.monotonic,
+        shrink: float = 0.5,
+        grow: float = 1.5,
+        target_fill: float = 0.5,
+        rate_window: int = 256,
+    ):
+        if not 0 < min_delay_ms <= max_delay_ms:
+            raise ValueError("need 0 < min_delay_ms <= max_delay_ms")
+        if not 0 < shrink < 1 < grow:
+            raise ValueError("need 0 < shrink < 1 < grow")
+        if not 0 < target_fill <= 1:
+            raise ValueError("need 0 < target_fill <= 1")
+        self.min_delay_s = min_delay_ms / 1e3
+        self.max_delay_s = max_delay_ms / 1e3
+        self.shrink = shrink
+        self.grow = grow
+        self.target_fill = target_fill
+        self._clock = clock
+        self._delay_s = self.max_delay_s  # start patient: latency floor is
+        self._arrivals: deque = deque(maxlen=rate_window)  # opt-in, fill is not
+        self._lock = threading.Lock()
+        self.shrinks = 0
+        self.grows = 0
+
+    @property
+    def delay_s(self) -> float:
+        return self._delay_s
+
+    @property
+    def delay_ms(self) -> float:
+        return self._delay_s * 1e3
+
+    def note_arrival(self) -> None:
+        """Record one request arrival (timestamped on the injected clock)."""
+        with self._lock:
+            self._arrivals.append(self._clock())
+
+    def arrival_rate(self) -> float:
+        """Requests/second over the rolling arrival window (0.0 until two
+        arrivals at distinct clock readings)."""
+        with self._lock:
+            if len(self._arrivals) < 2:
+                return 0.0
+            span = self._arrivals[-1] - self._arrivals[0]
+            return (len(self._arrivals) - 1) / span if span > 0 else 0.0
+
+    def observe_flush(
+        self, *, n_requests: int, capacity: int, deadline_hit: bool
+    ) -> None:
+        """Adapt to one flushed batch: shrink on an early full batch, grow on
+        a sparse deadline flush, hold otherwise."""
+        with self._lock:
+            if not deadline_hit and n_requests >= capacity:
+                self._delay_s = max(self.min_delay_s, self._delay_s * self.shrink)
+                self.shrinks += 1
+            elif deadline_hit and n_requests < self.target_fill * capacity:
+                self._delay_s = min(self.max_delay_s, self._delay_s * self.grow)
+                self.grows += 1

@@ -7,6 +7,11 @@ valid prefix of the sorted output is exactly the answer) and one ahead-of-time
 compiled executable is kept per (kind, bucket shape, dtype, plan) key.  After
 warmup, a submit is a pure numpy pad + one AOT executable call — zero jax
 tracing or lowering on the hot path.
+
+The cluster (model D) path has its own compiled cache keyed on slab capacity
+— which is why capacity learning (repro.engine.adapt) matters: a learned
+``capacity_factor`` means the steady-state capacity is known at the first
+call, so overflow retries never force fresh compilations there either.
 """
 from __future__ import annotations
 

@@ -20,7 +20,11 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core.cluster_sort import partition_exchange, slab_geometry
+from repro.core.cluster_sort import (
+    partition_exchange,
+    run_with_capacity_retries,
+    slab_geometry,
+)
 from repro.core.radix import make_partitioner
 
 __all__ = ["sort_kv", "sort_pairs", "argsort", "topk", "cluster_sort_kv"]
@@ -85,9 +89,10 @@ def cluster_kv_local(
 ):
     """shard_map body: exchange (key, value) records, stable-sort the slab.
 
-    Returns (sorted_keys (B/P*C,), sorted_values pytree, my_count, overflow).
-    Entries [0, my_count) are this shard's contiguous range of the global
-    stable sort; the tail is sentinel/zero padding.
+    Returns (sorted_keys (B/P*C,), sorted_values pytree, my_count, peak,
+    overflow).  Entries [0, my_count) are this shard's contiguous range of
+    the global stable sort; the tail is sentinel/zero padding; ``peak`` is
+    the mesh-wide max per-(sender, bucket) count (capacity-learning signal).
     """
     P_ = jax.lax.axis_size(axis_name)
     idx = jax.lax.axis_index(axis_name)
@@ -112,7 +117,8 @@ def cluster_kv_local(
     global_counts = jax.lax.psum(ex.counts, axis_name)  # (n_buckets,)
     owner = (jnp.arange(n_buckets, dtype=jnp.int32) * P_) // n_buckets
     my_count = jnp.sum(jnp.where(owner == idx, global_counts, 0)).astype(jnp.int32)
-    return sorted_k, sorted_v, my_count[None], ex.overflow
+    peak = jax.lax.pmax(jnp.max(ex.counts), axis_name)
+    return sorted_k, sorted_v, my_count[None], peak, ex.overflow
 
 
 @lru_cache(maxsize=256)
@@ -137,7 +143,7 @@ def _compiled_cluster_kv(
             body,
             mesh=mesh,
             in_specs=(P(axis), P(axis)),
-            out_specs=(P(axis), P(axis), P(axis), P()),
+            out_specs=(P(axis), P(axis), P(axis), P(), P()),
         )
     )
 
@@ -155,12 +161,16 @@ def cluster_sort_kv(
     hi=1,
     compress: bool = False,
     max_retries: int = 4,
+    telemetry=None,
 ):
     """Distributed stable key–value sort (model D with a values payload).
 
     Returns (slab_keys (P*C_total,), slab_values pytree, valid mask); shard
     p's range of the globally sorted records sits in its slab prefix.  Retries
-    with doubled capacity on overflow, like ``cluster_sort``.
+    with doubled capacity on overflow, like ``cluster_sort`` — and like it,
+    reports per-call exchange telemetry (peak bucket count, overflow/retry/
+    recompile events) through the optional ``telemetry`` callback that
+    ``repro.engine.adapt`` turns into learned capacity factors.
 
     >>> import jax, jax.numpy as jnp
     >>> mesh = jax.make_mesh((jax.device_count(),), ("x",))
@@ -178,18 +188,21 @@ def cluster_sort_kv(
     m = n // P_
     part_buckets, n_buckets, cap = slab_geometry(mode, m, P_, capacity_factor)
 
-    for _ in range(max_retries + 1):
-        fn = _compiled_cluster_kv(
-            mesh, axis, mode, cap, part_buckets, n_buckets, digits, lo, hi, compress
-        )
-        slab_k, slab_v, counts, overflow = fn(keys, values)
-        if not bool(overflow):
-            C_total = slab_k.shape[0] // P_
-            pos = jnp.arange(slab_k.shape[0]) % C_total
-            valid = pos < jnp.repeat(counts, C_total)
-            return slab_k, slab_v, valid
-        cap = min(m, cap * 2)
-    raise RuntimeError("cluster_sort_kv: capacity overflow persisted after retries")
+    (slab_k, slab_v), valid = run_with_capacity_retries(
+        lambda c: _compiled_cluster_kv(
+            mesh, axis, mode, c, part_buckets, n_buckets, digits, lo, hi, compress
+        ),
+        lambda fn: fn(keys, values),
+        m=m,
+        P_=P_,
+        part_buckets=part_buckets,
+        cap=cap,
+        max_retries=max_retries,
+        telemetry=telemetry,
+        lru=_compiled_cluster_kv,
+        label="cluster_sort_kv",
+    )
+    return slab_k, slab_v, valid
 
 
 # ---------------------------------------------------------------- front API ---
@@ -211,7 +224,11 @@ def sort_kv(
     picks the local argsort engine ('xla' or 'pallas', ``block_n`` = kernel
     tile width; only 'xla' totally orders NaN keys).  With ``mesh=``/
     ``axis=``: 1-D keys, model-D exchange of full records, returns dense
-    (n,)-shaped results (the slab is compacted eagerly).
+    (n,)-shaped results (the slab is compacted eagerly).  The mesh path
+    closes the capacity-learning loop by default — it runs at the default
+    planner's learned ``capacity_factor`` for this (size, dtype, mesh) cell
+    and reports exchange telemetry back (pass ``capacity_factor=`` or
+    ``telemetry=`` to opt out; see repro.engine.adapt).
 
     >>> import jax.numpy as jnp
     >>> k, v = sort_kv(jnp.array([3, 1, 2]), {"p": jnp.array([0, 1, 2])})
@@ -236,6 +253,14 @@ def sort_kv(
             compress=compress, **cluster_kw,
         )
         return _rev_key(k), v
+    if "capacity_factor" not in cluster_kw and "telemetry" not in cluster_kw:
+        # close the capacity-learning loop through the default planner; an
+        # explicit capacity_factor= or telemetry= opts out of the whole loop
+        from .planner import default_planner
+
+        cluster_kw.update(
+            default_planner().cluster_kwargs(keys.shape[-1], keys.dtype, mesh)
+        )
     slab_k, slab_v, valid = cluster_sort_kv(
         keys, values, mesh, axis, compress=compress, **cluster_kw
     )

@@ -11,15 +11,26 @@ processes start with tuned choices.
 
 Plan-cache file format (versioned, human-editable)::
 
-    {"version": 1,
-     "plans": {"<size_bucket>|<dtype>|<mesh_fp>": {"strategy": "shared", ...}}}
+    {"version": 2,
+     "plans": {"<size_bucket>|<dtype>|<mesh_fp>": {"strategy": "shared", ...}},
+     "learned": {"<size_bucket>|<dtype>|<mesh_fp>": {"capacity_factor": 3.75,
+                                                     "peak_factor": 3.0,
+                                                     "observations": 7}}}
+
+The ``learned`` section (schema v2) is the capacity-learning feedback loop's
+persistent state: per-cell capacity factors distilled from observed exchange
+telemetry (repro.engine.adapt), so a restarted serving process sizes model-D
+slabs right on its first compile.  Version-1 files load fine — they simply
+carry no learned state.
 """
 from __future__ import annotations
 
 import json
 import os
+import threading
 import time
 import warnings
+import weakref
 from dataclasses import asdict, dataclass, replace
 from typing import Dict, Optional
 
@@ -31,6 +42,8 @@ from repro.core.cluster_sort import cluster_sort
 from repro.core.distributed_sort import distributed_merge_sort
 from repro.core.seqsort import LOCAL_SORTS
 from repro.core.shared_sort import shared_memory_sort
+
+from .adapt import CapacityLearner, ExchangeObservation, ExchangeTelemetry, LearnedCapacity
 
 __all__ = [
     "SortPlan",
@@ -45,7 +58,8 @@ __all__ = [
     "PALLAS_INTERPRET_MAX",
 ]
 
-_PLAN_VERSION = 1
+_PLAN_VERSION = 2
+_LOADABLE_VERSIONS = (1, _PLAN_VERSION)  # v1 = plans only, no learned section
 
 # strategy names: 'shared' covers paper models A/B (A = local_impl='merge',
 # B = local_impl='xla'/'bitonic'); C and D keep their api.py names.
@@ -217,6 +231,14 @@ def candidate_plans(mesh=None, *, quick: bool = False):
 class Planner:
     """Plan table: lookup tuned plans, autotune missing cells, persist JSON.
 
+    Beyond the tuned-plan table, the planner closes the capacity-learning
+    loop (repro.engine.adapt): ``recorder`` hands ``cluster_sort`` /
+    ``cluster_sort_kv`` a telemetry callback bound to a plan-cache key,
+    ``observe_exchange`` folds each observation into a learned per-key
+    ``capacity_factor``, and ``plan_for`` serves cluster plans with the
+    learned factor applied — persisted through the JSON plan cache so the
+    lesson survives restarts.
+
     >>> Planner().plan_for(1000, jnp.int32).strategy   # untuned: default rule
     'shared'
     """
@@ -224,6 +246,13 @@ class Planner:
     def __init__(self, path: Optional[str] = None):
         self.path = path
         self.plans: Dict[str, SortPlan] = {}
+        self.telemetry = ExchangeTelemetry()
+        self.learner = CapacityLearner()
+        self.learned: Dict[str, LearnedCapacity] = {}
+        # services register their stats here so overflow retries/recompiles
+        # observed on the exchange path surface in serving telemetry
+        self._stats_sinks: list = []
+        self._lock = threading.Lock()
         if path and os.path.exists(path):
             self.load(path)
 
@@ -240,7 +269,7 @@ class Planner:
         try:
             with open(path) as f:
                 doc = json.load(f)
-            if doc.get("version") != _PLAN_VERSION:
+            if doc.get("version") not in _LOADABLE_VERSIONS:
                 raise ValueError(
                     f"plan cache version {doc.get('version')!r} unsupported"
                 )
@@ -257,6 +286,14 @@ class Planner:
                         f"plan entry {k!r} has unknown strategy {plan.strategy!r}"
                     )
                 plans[k] = plan
+            raw_learned = doc.get("learned", {})  # absent in v1 files
+            if not isinstance(raw_learned, dict):
+                raise ValueError("'learned' must be an object")
+            learned = {}
+            for k, v in raw_learned.items():
+                if not isinstance(v, dict) or "capacity_factor" not in v:
+                    raise ValueError(f"learned entry {k!r} is malformed")
+                learned[k] = LearnedCapacity.from_dict(v)
         except Exception as e:
             if strict:
                 raise
@@ -268,22 +305,30 @@ class Planner:
             )
             return self
         self.plans = plans
+        self.learned = learned
         return self
 
     def save(self, path: Optional[str] = None) -> str:
         path = path or self.path
         if path is None:
             raise ValueError("no path given and Planner has no default path")
-        doc = {
-            "version": _PLAN_VERSION,
-            "plans": {k: p.to_dict() for k, p in sorted(self.plans.items())},
-        }
-        tmp = f"{path}.tmp"
-        os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
-        with open(tmp, "w") as f:
-            json.dump(doc, f, indent=1)
-        os.replace(tmp, path)
-        self.path = self.path or path
+        # the whole write happens under the lock: concurrent telemetry-driven
+        # saves share one tmp path, and interleaved writes must never be
+        # os.replace'd into the cache a serving process will load
+        with self._lock:
+            doc = {
+                "version": _PLAN_VERSION,
+                "plans": {k: p.to_dict() for k, p in sorted(self.plans.items())},
+                "learned": {
+                    k: c.to_dict() for k, c in sorted(self.learned.items())
+                },
+            }
+            tmp = f"{path}.tmp"
+            os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+            with open(tmp, "w") as f:
+                json.dump(doc, f, indent=1)
+            os.replace(tmp, path)
+            self.path = self.path or path
         return path
 
     # ------------------------------------------------------------- lookup ---
@@ -291,8 +336,105 @@ class Planner:
         return self.plans.get(plan_key(n, dtype, mesh))
 
     def plan_for(self, n: int, dtype, mesh=None) -> SortPlan:
-        """Tuned plan if one exists, else the pre-engine default rule."""
-        return self.lookup(n, dtype, mesh) or default_plan(mesh)
+        """Tuned plan if one exists, else the pre-engine default rule — with
+        the learned capacity factor folded into cluster plans, so steady-state
+        callers size model-D slabs right on their first compile."""
+        plan = self.lookup(n, dtype, mesh) or default_plan(mesh)
+        if plan.strategy == "cluster":
+            cf = self.capacity_factor_for(
+                plan_key(n, dtype, mesh), default=plan.capacity_factor
+            )
+            if cf != plan.capacity_factor:
+                plan = replace(plan, capacity_factor=cf)
+        return plan
+
+    # -------------------------------------------------- capacity learning ---
+    def capacity_factor_for(self, key: str, default: float = 2.0) -> float:
+        """The learned capacity factor for a plan-cache key (``default``
+        until telemetry for that key has taught us otherwise)."""
+        with self._lock:
+            entry = self.learned.get(key)
+        return entry.capacity_factor if entry is not None else default
+
+    # persistence debounce: a learned-factor move below this fraction of the
+    # default stays in memory only — skew that fluctuates call-to-call must
+    # not turn the sort hot path into a full-file rewrite per call
+    _SAVE_REL_DELTA = 0.05
+
+    def observe_exchange(
+        self, key: str, obs: ExchangeObservation, *, default: float = 2.0
+    ) -> LearnedCapacity:
+        """Fold one exchange observation into the learned table (and the
+        telemetry ledger).  Persists when the planner has a backing file and
+        the learned factor moved *materially* (>= ``_SAVE_REL_DELTA`` of the
+        default, or landed exactly back on it) — steady state costs zero
+        writes, and jittery skew costs only in-memory updates."""
+        self.telemetry.record(key, obs)
+        with self._lock:
+            prev = self.learned.get(key)
+            prev_cf = prev.capacity_factor if prev else default
+            cf = self.learner.update(prev_cf, obs, default=default)
+            entry = LearnedCapacity(
+                capacity_factor=cf,
+                peak_factor=max(
+                    prev.peak_factor if prev else 0.0, obs.required_factor()
+                ),
+                observations=(prev.observations if prev else 0) + 1,
+            )
+            self.learned[key] = entry
+            changed = cf != prev_cf and (
+                abs(cf - prev_cf) >= self._SAVE_REL_DELTA * default
+                or cf == default  # the decay's landing point is worth a write
+            )
+            self._stats_sinks = [r for r in self._stats_sinks if r() is not None]
+            sinks = list(self._stats_sinks)
+        for ref in sinks:
+            svc = ref()
+            if svc is not None:
+                svc._note_exchange(obs)
+        if changed and self.path:
+            self.save()
+        return entry
+
+    def recorder(self, n: int, dtype, mesh=None, *, default: float = 2.0):
+        """A telemetry callback for ``cluster_sort(telemetry=...)`` bound to
+        this planner and the (n, dtype, mesh) plan-cache key — the glue that
+        closes the capacity-learning loop."""
+        key = plan_key(n, dtype, mesh)
+
+        def record(**kwargs) -> None:
+            self.observe_exchange(key, ExchangeObservation(**kwargs), default=default)
+
+        return record
+
+    def cluster_kwargs(
+        self, n: int, dtype, mesh=None, *, default: Optional[float] = None
+    ) -> dict:
+        """The ``capacity_factor=`` / ``telemetry=`` kwargs that close the
+        capacity-learning loop for one cluster call — the one policy both
+        ``repro.sort`` and ``engine.sort_kv`` apply (only when the caller
+        passed neither kwarg: an explicit value opts the call out of the
+        whole loop, reading and writing).  ``default`` is the learner's
+        floor; when omitted, a tuned cluster plan's own factor (if any) is
+        used so a cell that won at a lean factor is never re-inflated."""
+        if default is None:
+            base = self.lookup(n, dtype, mesh)
+            default = (
+                base.capacity_factor
+                if base is not None and base.strategy == "cluster"
+                else SortPlan.capacity_factor
+            )
+        key = plan_key(n, dtype, mesh)
+        return {
+            "capacity_factor": self.capacity_factor_for(key, default=default),
+            "telemetry": self.recorder(n, dtype, mesh, default=default),
+        }
+
+    def add_stats_sink(self, service) -> None:
+        """Register a service whose stats should see exchange retry/recompile
+        counts (held weakly; dead services are dropped on the next observe)."""
+        with self._lock:
+            self._stats_sinks.append(weakref.ref(service))
 
     # ----------------------------------------------------------- autotune ---
     def autotune(

@@ -21,6 +21,14 @@ dispatcher, and rejects later submits (also the context-manager exit path).
 ``QueueStats`` extends ``ServiceStats`` with queue-level telemetry: batch
 fill ratio, coalesced-batch sizes, and rolling queue-latency percentiles.
 See docs/serving.md for the request lifecycle.
+
+Timing is injectable: every batching decision (enqueue stamps, flush
+deadlines, queue latencies) reads the ``clock`` passed at construction
+(``time.monotonic`` by default; ``repro.engine.adapt.ManualClock`` in
+tests), and passing ``min_delay_ms`` turns the fixed flush window into a
+``DelayController``-adapted one — shrink when batches fill before the
+deadline, grow when they flush sparse, always within
+``[min_delay_ms, max_delay_ms]``.
 """
 from __future__ import annotations
 
@@ -30,10 +38,11 @@ import time
 from collections import deque
 from concurrent.futures import Future
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional
 
 import numpy as np
 
+from .adapt import DelayController
 from .planner import Planner
 from .service import ServiceStats, SortService
 
@@ -117,11 +126,19 @@ class AsyncSortService:
                   many requests.
     max_delay_ms: flush a group at latest this long after its *oldest* request
                   arrived — the latency bound a half-empty batch waits for.
+    min_delay_ms: opt into the adaptive flush window: a ``DelayController``
+                  moves the effective delay within
+                  ``[min_delay_ms, max_delay_ms]`` from observed fill
+                  (``None`` = fixed window, the prior behaviour).
     maxsize:      bound on admitted-but-unexecuted requests (0 = unbounded).
     on_full:      'block' stalls producers while the queue is full;
                   'reject' raises ``queue.Full`` at the ``submit_async`` site.
     start:        launch the dispatcher thread immediately (tests pass False
                   to stage traffic deterministically, then call ``start()``).
+    clock:        monotonic time source for every batching decision — enqueue
+                  stamps, flush deadlines, latencies, delay adaptation.
+                  Inject ``repro.engine.adapt.ManualClock`` to make queue
+                  timing fully deterministic in tests.
 
     >>> import numpy as np
     >>> with AsyncSortService(max_batch=4, max_delay_ms=5.0) as svc:
@@ -138,10 +155,12 @@ class AsyncSortService:
         *,
         max_batch: int = 64,
         max_delay_ms: float = 2.0,
+        min_delay_ms: Optional[float] = None,
         maxsize: int = 1024,
         on_full: str = "block",
         start: bool = True,
         planner: Optional[Planner] = None,
+        clock: Callable[[], float] = time.monotonic,
     ):
         if on_full not in ("block", "reject"):
             raise ValueError("on_full must be 'block' or 'reject'")
@@ -154,6 +173,12 @@ class AsyncSortService:
             self.service.stats = QueueStats(**vars(self.service.stats))
         self.max_batch = int(max_batch)
         self.max_delay_s = float(max_delay_ms) / 1e3
+        self._clock = clock
+        self.delay: Optional[DelayController] = (
+            None
+            if min_delay_ms is None
+            else DelayController(float(min_delay_ms), float(max_delay_ms), clock=clock)
+        )
         self.on_full = on_full
         self._q: _stdqueue.Queue = _stdqueue.Queue(maxsize=maxsize)
         self._pending: Dict[tuple, List[_Request]] = {}
@@ -183,9 +208,17 @@ class AsyncSortService:
             self._thread.start()
         return self
 
+    @property
+    def delay_s(self) -> float:
+        """The effective coalescing window: the controller's current value
+        when adaptive, else the fixed ``max_delay_ms``."""
+        return self.delay.delay_s if self.delay is not None else self.max_delay_s
+
     def drain(self, timeout: Optional[float] = None) -> bool:
         """Block until every admitted request has resolved (or ``timeout``
-        seconds elapse). Returns True when fully drained."""
+        wall-clock seconds elapse — real time even under an injected clock,
+        so a frozen test clock can't hang a drain forever). Returns True
+        when fully drained."""
         deadline = None if timeout is None else time.perf_counter() + timeout
         with self._done:
             while self._outstanding > 0:
@@ -259,7 +292,7 @@ class AsyncSortService:
         req = np.array(reqs[0], copy=True)
         val = np.array(vals[0], copy=True) if vals is not None else None
         gk = self.service._group_key(req, val)
-        item = _Request((kind, bool(ascending)) + gk, req, val, time.perf_counter())
+        item = _Request((kind, bool(ascending)) + gk, req, val, self._clock())
         # the closed-check and the admission counter are one atom with
         # respect to close(): close() flips _closed under this lock, then
         # waits for in-flight admissions to land their put before it lets
@@ -282,6 +315,16 @@ class AsyncSortService:
             with self._done:
                 self._admitting -= 1
                 self._done.notify_all()
+        # re-stamp at admission: a producer that sat out a blocking put must
+        # not carry a pre-expired flush deadline into the dispatcher (the
+        # coalescing window starts when coalescing *can* start). Benign race:
+        # if the dispatcher already grabbed the item, it saw the submit-time
+        # stamp — a slightly early deadline, never a stuck one.
+        item.t_enq = self._clock()
+        # only admitted requests count as arrivals: rejected/closed submits
+        # must not inflate the adaptive controller's rate estimate
+        if self.delay is not None:
+            self.delay.note_arrival()
         return item.future
 
     # ---------------------------------------------------------- dispatcher ---
@@ -290,28 +333,38 @@ class AsyncSortService:
         while not (self._stop.is_set() and self._q.empty() and not self._pending):
             wait = poll
             if self._pending:
-                now = time.perf_counter()
+                now = self._clock()
                 wait = max(0.0, min(min(self._deadlines.values()) - now, poll))
             try:
-                item = self._q.get(timeout=wait)
+                items = [self._q.get(timeout=wait)]
             except _stdqueue.Empty:
-                item = None
-            if item is not None:
+                items = []
+            # drain everything already admitted before looking at deadlines:
+            # requests that queued up while a batch was executing must join
+            # one group, not flush as a string of expired singletons
+            while True:
+                try:
+                    items.append(self._q.get_nowait())
+                except _stdqueue.Empty:
+                    break
+            for item in items:
                 group = self._pending.setdefault(item.key, [])
                 group.append(item)
-                self._deadlines.setdefault(item.key, item.t_enq + self.max_delay_s)
+                # the deadline snapshots the *current* adaptive window when
+                # the group opens, so one flush decision uses one delay value
+                self._deadlines.setdefault(item.key, item.t_enq + self.delay_s)
                 if len(group) >= self.max_batch:
-                    self._flush(item.key)
-            now = time.perf_counter()
+                    self._flush(item.key, cause="full")
+            now = self._clock()
             for key in [k for k, d in self._deadlines.items() if d <= now]:
-                self._flush(key)
+                self._flush(key, cause="deadline")
             if self._stop.is_set() and self._q.empty():
                 for key in list(self._pending):
-                    self._flush(key)
+                    self._flush(key, cause="close")
         for key in list(self._pending):  # safety: never strand a future
-            self._flush(key)
+            self._flush(key, cause="close")
 
-    def _flush(self, key: tuple) -> None:
+    def _flush(self, key: tuple, *, cause: str = "deadline") -> None:
         all_items = self._pending.pop(key, [])
         self._deadlines.pop(key, None)
         # a caller-cancelled future must neither run nor poison set_result
@@ -320,10 +373,18 @@ class AsyncSortService:
             self._mark_done(len(all_items) - len(items))
         if not items:
             return
+        if self.delay is not None and cause != "close":
+            # adapt the window to what this flush revealed; lifecycle
+            # flushes at close say nothing about the arrival process
+            self.delay.observe_flush(
+                n_requests=len(items),
+                capacity=self.max_batch,
+                deadline_hit=cause == "deadline",
+            )
         kind, ascending = key[0], key[1]
         reqs = [it.req for it in items]
         vals = [it.val for it in items] if kind == "sort_kv" else None
-        t_exec = time.perf_counter()
+        t_exec = self._clock()
         try:
             results = self.service._run_group(
                 kind, key[2:], reqs, vals, ascending=ascending

@@ -46,6 +46,14 @@ class ServiceStats:
     ``throughput_keys_per_s`` stays meaningful (and ``elapsed_s`` never
     exceeds real wall time) no matter how many threads submit at once.
 
+    ``overflow_retries`` / ``recompiles`` count model-D slab overflows (and
+    the fresh executables those overflows forced) observed by this service's
+    *planner* on the exchange path — previously this telemetry silently
+    vanished; now it rides the same ledger ``serve.py --stats`` prints.
+    They mirror planner-wide telemetry: every service sharing a planner (the
+    process-wide default, usually) sees the same counts, so read them as
+    "what the planner saw", not a per-service sum.
+
     >>> ServiceStats(keys_in=100, elapsed_s=2.0).throughput_keys_per_s()
     50.0
     """
@@ -57,6 +65,8 @@ class ServiceStats:
     elapsed_s: float = 0.0
     compiles: int = 0
     cache_hits: int = 0
+    overflow_retries: int = 0
+    recompiles: int = 0
     _busy_until: float = field(default=0.0, repr=False, compare=False)
 
     def throughput_keys_per_s(self) -> float:
@@ -109,6 +119,16 @@ class SortService:
         # guards cache lookups/compiles and stats counters; the executable
         # call itself runs outside it so concurrent batches still overlap
         self._lock = threading.Lock()
+        # overflow retries/recompiles the planner observes on the exchange
+        # path land in this service's stats instead of vanishing
+        self.planner.add_stats_sink(self)
+
+    def _note_exchange(self, obs) -> None:
+        """Planner stats-sink hook: fold one exchange observation's retry and
+        recompile cost into this service's ledger."""
+        with self._lock:
+            self.stats.overflow_retries += obs.retries
+            self.stats.recompiles += obs.recompiles
 
     # ------------------------------------------------------------ builders ---
     @staticmethod

@@ -8,11 +8,15 @@ descending argsort) — the serving-path integration from DESIGN.md §3.
 queue instead (repro.engine.AsyncSortService): every row is an independent
 single-request producer, and the queue coalesces them back into one
 executable call per step — the serving shape docs/serving.md describes,
-with queue stats printed at exit.
+with queue stats printed at exit.  ``--adaptive`` (implies ``--topk-queue``)
+lets a ``DelayController`` move the flush window with the observed arrival
+rate instead of pinning ``max_delay_ms``; ``--stats`` prints the full
+service ledger, including the ``overflow_retries`` / ``recompiles``
+exchange-path counters that previously vanished from serving telemetry.
 
 Usage:
   python -m repro.launch.serve --arch qwen3-0.6b --reduced --batch 4 \
-      --prompt-len 32 --gen 16 [--topk-queue]
+      --prompt-len 32 --gen 16 [--topk-queue] [--adaptive] [--stats]
 """
 from __future__ import annotations
 
@@ -69,12 +73,26 @@ def main(argv=None):
     ap.add_argument("--topk-queue", action="store_true",
                     help="route per-row top-k through the AsyncSortService "
                          "micro-batching queue (docs/serving.md)")
+    ap.add_argument("--adaptive", action="store_true",
+                    help="adapt the queue's flush window to the arrival rate "
+                         "(DelayController; implies --topk-queue)")
+    ap.add_argument("--min-delay-ms", type=float, default=0.1,
+                    help="lower bound of the adaptive flush window")
+    ap.add_argument("--stats", action="store_true",
+                    help="print the full service ledger at exit, incl. the "
+                         "overflow_retries / recompiles exchange counters "
+                         "(implies --topk-queue: the ledger lives on the "
+                         "sort service)")
     args = ap.parse_args(argv)
 
     qsvc = None
-    if args.topk_queue:
+    if args.topk_queue or args.adaptive or args.stats:
         from repro.engine import AsyncSortService
-        qsvc = AsyncSortService(max_batch=args.batch, max_delay_ms=2.0)
+        qsvc = AsyncSortService(
+            max_batch=args.batch,
+            max_delay_ms=2.0,
+            min_delay_ms=args.min_delay_ms if args.adaptive else None,
+        )
 
     cfg = ARCHS[args.arch]
     if args.reduced:
@@ -128,6 +146,19 @@ def main(argv=None):
         print(f"sort-queue: batches={qs.coalesced_batches} "
               f"fill={qs.fill_ratio():.2f} compiles={qs.compiles} "
               f"queue p50={pct[50]*1e3:.2f} ms p99={pct[99]*1e3:.2f} ms")
+        if qsvc.delay is not None:
+            print(f"adaptive-delay: window={qsvc.delay.delay_ms:.3f} ms "
+                  f"(bounds [{qsvc.delay.min_delay_s*1e3:.3f}, "
+                  f"{qsvc.delay.max_delay_s*1e3:.3f}]) "
+                  f"shrinks={qsvc.delay.shrinks} grows={qsvc.delay.grows} "
+                  f"arrival_rate={qsvc.delay.arrival_rate():.1f}/s")
+        if args.stats:
+            print(f"service-stats: requests={qs.requests} batches={qs.batches} "
+                  f"keys_in={qs.keys_in} compiles={qs.compiles} "
+                  f"cache_hits={qs.cache_hits} "
+                  f"overflow_retries={qs.overflow_retries} "
+                  f"recompiles={qs.recompiles} "
+                  f"throughput={qs.throughput_keys_per_s():.0f} keys/s")
     assert gen.min() >= 0 and gen.max() < cfg.vocab_size, "pad-vocab leak!"
     return gen
 

@@ -5,6 +5,9 @@ async micro-batching queue (``AsyncSortService`` — individual requests
 coalesced across producers) against the hand-batched sync path
 (``SortService.submit`` with a caller-assembled batch).  The delta between
 those two rows is the cost of letting the queue do the batching for you.
+The ``moe_dispatch_adaptive`` row times the other consumer of the unified
+exchange layer: MoE expert dispatch at a *learned* capacity factor, after a
+skewed router paid its overflow retry exactly once (docs/exchange.md).
 
 Sweeps data sizes over the four strategies (plus a Pallas-kernel local-sort
 column, ``B_shared_pallas`` — interpret-mode numbers off-TPU, so read that
@@ -119,6 +122,50 @@ def serving_rows(rng, *, reps: int, smoke: bool):
     return rows
 
 
+def moe_rows(rng, *, reps: int, smoke: bool):
+    """MoE dispatch through the adaptive exchange engine (docs/exchange.md).
+
+    A worst-case-skewed router (everything collapses onto one hot expert)
+    dispatches through ``moe_apply_adaptive``: the first call pays the
+    overflow retry and teaches the planner a per-(n_experts, top_k, token
+    bucket) capacity factor; the timed steady-state loop then runs at the
+    learned factor — the ``derived`` column shows what was learned and that
+    the retry was paid exactly once.
+    """
+    from repro.engine import Planner
+    from repro.models.moe import (
+        MoEConfig, collapse_router, moe_apply_adaptive, moe_init, moe_plan_key,
+    )
+
+    cfg = MoEConfig(d_model=32, d_ff=16, n_experts=8, top_k=2)
+    p = collapse_router(
+        moe_init(jax.random.PRNGKey(0), cfg, jnp.float32, ep_shards=1), 8.0)
+    T = 256 if smoke else 1024
+    xs = [jnp.asarray(rng.standard_normal((T, cfg.d_model)), np.float32)
+          for _ in range(4)]
+
+    planner = Planner()
+    key = moe_plan_key(T, cfg, jnp.float32)
+    y, _, _ = moe_apply_adaptive(p, cfg, xs[0], planner=planner)  # pays retry
+    first = planner.telemetry.last(key)
+    jax.block_until_ready(y)
+
+    t0 = time.perf_counter()
+    for i in range(max(reps, 2) * 4):
+        y, _, _ = moe_apply_adaptive(p, cfg, xs[i % len(xs)], planner=planner)
+    jax.block_until_ready(y)
+    dt = (time.perf_counter() - t0) / (max(reps, 2) * 4)
+    cf = planner.capacity_factor_for(key, default=cfg.capacity_factor)
+    return [(
+        f"engine/moe_dispatch_adaptive/T={T}xE{cfg.n_experts}k{cfg.top_k}",
+        dt * 1e6,
+        f"tokens_per_s={T / dt:.0f};learned_cf={cf:.2f};"
+        f"first_call_retries={first.retries};"
+        f"steady_retries={planner.telemetry.last(key).retries};"
+        f"dropped_averted={planner.telemetry.total_dropped_averted}",
+    )]
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true", help="tiny sizes for CI")
@@ -186,6 +233,7 @@ def main(argv=None):
         rows.append((f"engine/default_rule/n={n}", t_default, ""))
 
     rows += serving_rows(rng, reps=max(reps, 2), smoke=args.smoke)
+    rows += moe_rows(rng, reps=reps, smoke=args.smoke)
 
     if args.plans:
         planner.save()

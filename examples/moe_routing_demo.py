@@ -1,9 +1,13 @@
 """The flagship integration: MoE token dispatch IS the paper's model D.
 
-Shows, on an 8-device (data x model) mesh, that expert routing through
-``partition_exchange``/``combine_exchange`` (a) groups tokens per expert in
-*stable* arrival order — the property the paper chose merge sort for — and
-(b) reconstructs the exact dense-MoE output.
+Shows, on an 8-device (data x model) mesh, that expert routing through the
+unified exchange layer (``repro.exchange.partition_exchange`` /
+``combine_exchange`` — the same two calls ``core/cluster_sort.py`` sorts
+with) (a) groups tokens per expert in *stable* arrival order — the property
+the paper chose merge sort for — (b) reconstructs the exact dense-MoE
+output, and (c) closes the adaptive capacity loop: a skewed router pays its
+overflow retry exactly once, then serves at the learned expert capacity
+factor (docs/exchange.md).
 
     python examples/moe_routing_demo.py
 """
@@ -19,9 +23,16 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core import partition_exchange, combine_exchange
-from repro.engine import argsort, sort_kv
-from repro.models.moe import MoEConfig, moe_init, moe_apply_ep_replicated
+from repro.exchange import partition_exchange, combine_exchange
+from repro.engine import Planner, argsort, sort_kv
+from repro.models.moe import (
+    MoEConfig,
+    collapse_router,
+    moe_apply_adaptive,
+    moe_apply_ep_replicated,
+    moe_init,
+    moe_plan_key,
+)
 
 mesh = jax.make_mesh((2, 4), ("data", "model"))
 rng = np.random.default_rng(0)
@@ -77,3 +88,21 @@ x = jax.random.normal(jax.random.PRNGKey(1), (32, 16))
 y, aux, overflow = moe_apply_ep_replicated(p, cfg, x)
 print(f"MoE layer: aux_loss={float(aux):.3f} overflow={bool(overflow)} "
       f"out_norm={float(jnp.linalg.norm(y)):.2f} ✓")
+
+# --- adaptive capacity learning over the same layer --------------------------
+# concentrate the router on a few hot experts and start from a lean capacity
+# factor: the first adaptive call overflows, retries, and teaches the planner
+# a learned factor for this (n_experts, top_k, token-bucket) cell; the second
+# call — and, via the JSON plan cache, every restarted process — pays zero.
+acfg = cfg._replace(capacity_factor=1.0)
+skewed = collapse_router(p, 8.0)
+planner = Planner()  # in-memory; give it a path to persist across restarts
+cell = moe_plan_key(x.shape[0], acfg, x.dtype)
+y1, _, counts = moe_apply_adaptive(skewed, acfg, x, planner=planner)
+first = planner.telemetry.last(cell)
+y2, _, _ = moe_apply_adaptive(skewed, acfg, x, planner=planner)
+assert first.retries > 0 and planner.telemetry.last(cell).retries == 0
+assert np.allclose(np.asarray(y1), np.asarray(y2))
+print(f"adaptive: skewed router paid {first.retries} retrie(s) once, learned "
+      f"cf={planner.capacity_factor_for(cell, default=acfg.capacity_factor):.2f} "
+      f"(counts={np.asarray(counts).tolist()}), steady state pays zero ✓")

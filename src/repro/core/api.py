@@ -9,7 +9,8 @@
 'distributed_merge' (C), 'cluster' (D) — these bypass the planner's plan
 *selection*. Cluster runs on a mesh still close the capacity-learning loop
 through the default planner (learned ``capacity_factor`` + telemetry) unless
-``capacity_factor=`` / ``telemetry=`` are passed explicitly.
+``capacity_factor=`` / ``telemetry=`` — or a full ``plan=``, which pins its
+own ``capacity_factor`` — are passed explicitly.
 ``local_impl=`` / ``block_n=`` further override the per-partition sequential
 sort of whichever plan is selected (e.g. ``local_impl='pallas'`` routes every
 local sort through the VMEM-tiled Pallas kernel).
@@ -50,8 +51,10 @@ def sort(
     reports its exchange telemetry to the default planner and runs at that
     planner's learned ``capacity_factor`` for this (size, dtype, mesh) cell,
     so a workload that overflowed once never pays the overflow-retry
-    recompile again (pass ``capacity_factor=`` or ``telemetry=`` explicitly
-    to opt out — see repro.engine.adapt).
+    recompile again.  Passing ``capacity_factor=`` / ``telemetry=`` — or an
+    explicit ``plan=``, which pins the whole recipe including its
+    ``capacity_factor`` — opts the call out of the loop, reading and
+    writing (see repro.engine.adapt).
 
     >>> import jax.numpy as jnp
     >>> [int(v) for v in sort(jnp.array([3, 1, 2]))]
@@ -64,6 +67,10 @@ def sort(
 
     from repro.engine.planner import default_planner, plan_from_strategy, run_plan
 
+    # an explicit plan= pins the full recipe — including capacity_factor —
+    # so it must neither read nor mutate the learned table below (strategy=
+    # only names a model family and keeps the loop on)
+    pinned_plan = plan is not None and strategy is None
     if strategy is not None:
         plan = plan_from_strategy(strategy, n_threads=n_threads)
     elif plan is None:
@@ -82,13 +89,14 @@ def sort(
     if (
         plan.strategy == "cluster"
         and mesh is not None
+        and not pinned_plan
         and "capacity_factor" not in kwargs
         and "telemetry" not in kwargs
     ):
         # close the feedback loop: run at the learned capacity factor and
         # report this call's exchange telemetry back to the planner.  An
-        # explicit capacity_factor= or telemetry= opts out of the WHOLE
-        # loop — a pinned experiment must neither read nor mutate the
+        # explicit capacity_factor=, telemetry=, or plan= opts out of the
+        # WHOLE loop — a pinned experiment must neither read nor mutate the
         # process-wide learned state
         kwargs.update(
             default_planner().cluster_kwargs(

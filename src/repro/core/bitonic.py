@@ -32,21 +32,13 @@ __all__ = [
 ]
 
 
+# canonical home is the exchange layer (slab padding shares the sort
+# sentinel); re-exported here for the core-layer callers that grew up with it
+from repro.exchange import sentinel_for  # noqa: E402, F401
+
+
 def next_pow2(n: int) -> int:
     return 1 << max(0, (n - 1).bit_length())
-
-
-def sentinel_for(dtype, *, largest: bool):
-    """Value that sorts after (largest) / before (smallest) all real keys."""
-    dtype = jnp.dtype(dtype)
-    if jnp.issubdtype(dtype, jnp.floating):
-        v = jnp.inf if largest else -jnp.inf
-    elif jnp.issubdtype(dtype, jnp.integer):
-        info = jnp.iinfo(dtype)
-        v = info.max if largest else info.min
-    else:
-        raise TypeError(f"unsupported key dtype {dtype}")
-    return jnp.asarray(v, dtype)
 
 
 def _split(x, j: int):

@@ -10,29 +10,30 @@ This is the paper's headline algorithm and the framework's production path:
   3. each device sorts what it received with the fast local sort (the paper's
      per-node OpenMP hybrid = our vmapped XLA/bitonic sort).
 
-SPMD adaptation (DESIGN.md §2): MPI's variable-length messages become
-fixed-capacity slabs of ``capacity`` keys per (src, dst) pair, padded with
-sentinels. Overflow is detected collectively and surfaced; the non-jit
-``cluster_sort`` wrapper doubles capacity and retries, and
-``capacity == m`` is a loss-free guarantee.
-
-``partition_exchange`` / ``combine_exchange`` are the generic primitives —
-MoE dispatch (models/moe.py) is literally these two calls around the expert
-FFN, which is why this paper integrates as a first-class feature of the
-framework.
+The exchange machinery itself — ``partition_exchange``/``combine_exchange``,
+``slab_geometry``, the capacity-retry driver — lives in ``repro.exchange``
+(the unified adaptive exchange layer, docs/exchange.md); this module is the
+*sort* consumer of that layer, MoE dispatch (``models/moe.py``) is the other.
+The names are re-exported here for back-compat with pre-extraction callers.
 """
 from __future__ import annotations
 
-import threading
-from dataclasses import dataclass
 from functools import lru_cache, partial
-from typing import Any, Callable, Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from .bitonic import sentinel_for
+from repro.exchange import (  # noqa: F401  (re-exported for back-compat)
+    ExchangeResult,
+    combine_exchange,
+    partition_exchange,
+    run_with_capacity_retries,
+    slab_geometry,
+    slab_valid,
+)
+
 from .radix import make_partitioner
 from .seqsort import fast_local_sort
 
@@ -44,286 +45,6 @@ __all__ = [
     "cluster_sort",
     "slab_geometry",
 ]
-
-
-@dataclass
-class ExchangeResult:
-    recv_keys: jax.Array        # (P, C) keys received, sentinel-padded
-    recv_values: Any            # pytree of (P, C, ...) or None
-    recv_src_slot: jax.Array    # (P, C) flat slot id in the *sender's* slab
-    send_slot: jax.Array        # (m,) my element's slab slot, -1 if dropped
-    counts: jax.Array           # (P,) how many of my elements target each shard
-    overflow: jax.Array         # scalar bool: any (src,dst) bucket overflowed
-
-
-def _stable_argsort_by(dest: jax.Array) -> jax.Array:
-    """Stable order grouping elements by destination (XLA sort = local 'quicksort')."""
-    return jnp.argsort(dest, stable=True)
-
-
-def _quantize_rows(v: jax.Array):
-    """bf16/f32 (N, ...) -> (int8 payload, f32 per-row scale) for the wire."""
-    vf = v.astype(jnp.float32)
-    flat = vf.reshape(v.shape[0], -1)
-    scale = jnp.max(jnp.abs(flat), axis=-1) / 127.0
-    q = jnp.round(vf / jnp.maximum(scale, 1e-12).reshape((-1,) + (1,) * (v.ndim - 1)))
-    return q.astype(jnp.int8), scale
-
-
-def _dequantize_rows(q: jax.Array, scale: jax.Array, dtype):
-    return (
-        q.astype(jnp.float32) * scale.reshape((-1,) + (1,) * (q.ndim - 1))
-    ).astype(dtype)
-
-
-def _compressed_a2a(axis_name: str, P_: int, row: int):
-    """int8-on-the-wire all_to_all with a straight-through backward.
-
-    Forward ships (int8 payload, f32 per-row scale) — ~0.53x the bf16 bytes.
-    ``round`` has zero gradient, so the custom VJP routes cotangents through
-    the (self-transpose) all_to_all uncompressed.
-    """
-    a2a = partial(
-        jax.lax.all_to_all, axis_name=axis_name, split_axis=0, concat_axis=0, tiled=False
-    )
-
-    @jax.custom_vjp
-    def qa2a(v):  # v: (P_*row, ...) flat slab
-        q, s = _quantize_rows(v)
-        rq = a2a(q.reshape((P_, row) + v.shape[1:]))
-        rs = a2a(s.reshape(P_, row))
-        return _dequantize_rows(
-            rq.reshape((P_ * row,) + v.shape[1:]), rs.reshape(-1), v.dtype
-        )
-
-    def fwd(v):
-        return qa2a(v), None
-
-    def bwd(_, g):
-        back = a2a(g.reshape((P_, row) + g.shape[1:]))
-        return (back.reshape((P_ * row,) + g.shape[1:]),)
-
-    qa2a.defvjp(fwd, bwd)
-    return qa2a
-
-
-def partition_exchange(
-    keys: jax.Array,
-    values: Any,
-    bucket_ids: jax.Array,
-    axis_name: str,
-    *,
-    capacity: int,
-    n_buckets: Optional[int] = None,
-    compress: bool = False,
-) -> ExchangeResult:
-    """Ship every element to the shard owning its bucket (call inside shard_map).
-
-    keys: (m,); values: pytree of (m, ...) moved alongside; bucket_ids: (m,)
-    int32 in [0, n_buckets). ``n_buckets`` defaults to the axis size P and must
-    be a multiple of it; buckets map to shards contiguously (shard =
-    bucket * P // n_buckets) so bucket order == shard order (global sortedness
-    / expert grouping both rely on this). ``capacity`` is per (sender, bucket).
-
-    ``compress=True`` ships *float* value payloads as int8 with a per-element
-    f32 scale (beyond-paper: ~0.53x wire bytes for bf16 tokens; quantization
-    is straight-through for autodiff — the dequantized values carry
-    gradients). Integer leaves always travel uncompressed: quantization is
-    lossy and would corrupt indices/ids.
-
-    Returns slabs of shape (P, B_loc * capacity): row j = what shard j sent me,
-    laid out as (B_loc, capacity) for my local buckets.
-    """
-    P_ = jax.lax.axis_size(axis_name)
-    m = keys.shape[-1]
-    C = capacity
-    B = P_ if n_buckets is None else n_buckets
-    if B % P_:
-        raise ValueError(f"n_buckets={B} must be a multiple of axis size {P_}")
-    sent = sentinel_for(keys.dtype, largest=True)
-
-    # --- group by bucket (stable: preserves arrival order per bucket) ---
-    order = _stable_argsort_by(bucket_ids)
-    sorted_bkt = bucket_ids[order]
-    counts = jnp.bincount(bucket_ids, length=B).astype(jnp.int32)
-    offsets = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(counts)[:-1]])
-    pos_in_bucket = jnp.arange(m, dtype=jnp.int32) - offsets[sorted_bkt]
-    valid = pos_in_bucket < C
-    slot_sorted = jnp.where(valid, sorted_bkt * C + pos_in_bucket, B * C)
-
-    # --- build fixed-capacity send slab (scatter, OOB slots dropped) ---
-    slab_keys = jnp.full((B * C,), sent, keys.dtype)
-    slab_keys = slab_keys.at[slot_sorted].set(keys[order], mode="drop")
-
-    def to_slab(v):
-        buf = jnp.zeros((B * C,) + v.shape[1:], v.dtype)
-        return buf.at[slot_sorted].set(v[order], mode="drop")
-
-    slab_values = None if values is None else jax.tree.map(to_slab, values)
-
-    # remember where each *original* element went (for combine_exchange)
-    send_slot = (
-        jnp.full((m,), -1, jnp.int32)
-        .at[order]
-        .set(jnp.where(valid, slot_sorted, -1).astype(jnp.int32))
-    )
-    # receiver-side validity mask rides along as slot ids (-1 = padding)
-    slab_src_slot = (
-        jnp.full((B * C,), -1, jnp.int32)
-        .at[slot_sorted]
-        .set(slot_sorted.astype(jnp.int32), mode="drop")
-    )
-
-    # --- the one MSD-radix all_to_all (paper Fig 4 arrow: master -> nodes) ---
-    row = (B // P_) * C
-    a2a = partial(
-        jax.lax.all_to_all, axis_name=axis_name, split_axis=0, concat_axis=0, tiled=False
-    )
-    recv_keys = a2a(slab_keys.reshape(P_, row))
-    recv_src_slot = a2a(slab_src_slot.reshape(P_, row))
-    if values is None:
-        recv_values = None
-    elif compress:
-        # int8 quantization is lossy and only meaningful for float payloads;
-        # integer leaves (indices, ids) ship uncompressed to stay exact
-        recv_values = jax.tree.map(
-            lambda v: (
-                _compressed_a2a(axis_name, P_, row)(v).reshape((P_, row) + v.shape[1:])
-                if jnp.issubdtype(v.dtype, jnp.floating)
-                else a2a(v.reshape((P_, row) + v.shape[1:]))
-            ),
-            slab_values,
-        )
-    else:
-        recv_values = jax.tree.map(
-            lambda v: a2a(v.reshape((P_, row) + v.shape[1:])), slab_values
-        )
-
-    overflow = jax.lax.pmax(jnp.max(counts) > C, axis_name)
-    return ExchangeResult(
-        recv_keys=recv_keys,
-        recv_values=recv_values,
-        recv_src_slot=recv_src_slot,
-        send_slot=send_slot,
-        counts=counts,
-        overflow=overflow,
-    )
-
-
-def combine_exchange(
-    processed: Any,
-    ex: ExchangeResult,
-    axis_name: str,
-    *,
-    fill=0,
-) -> Any:
-    """Inverse exchange: return processed (P, C, ...) slabs to their senders and
-    restore original element order. Dropped (overflowed) elements get ``fill``.
-    """
-    a2a = partial(
-        jax.lax.all_to_all, axis_name=axis_name, split_axis=0, concat_axis=0, tiled=False
-    )
-    returned = jax.tree.map(a2a, processed)  # (P, C, ...) back in sender layout
-
-    m = ex.send_slot.shape[0]
-
-    def gather(v):
-        flat = v.reshape((v.shape[0] * v.shape[1],) + v.shape[2:])
-        safe = jnp.clip(ex.send_slot, 0, flat.shape[0] - 1)
-        out = flat[safe]
-        mask = (ex.send_slot >= 0).reshape((m,) + (1,) * (out.ndim - 1))
-        return jnp.where(mask, out, jnp.asarray(fill, out.dtype))
-
-    return jax.tree.map(gather, returned)
-
-
-def slab_geometry(mode: str, m: int, P_: int, capacity_factor: float):
-    """Exchange geometry for model D: (part_buckets, n_buckets, capacity).
-
-    ``part_buckets`` is what the partitioner emits (10 in the paper's decimal
-    mode, P otherwise); ``n_buckets`` rounds it up to the nearest multiple of
-    P so ``partition_exchange``'s ``B % P == 0`` contract holds for any node
-    count (buckets 10..n_buckets-1 simply stay empty).  ``capacity`` is sized
-    per *bucket* — a uniform load puts ~m/part_buckets keys in each (sender,
-    bucket) pair, so deriving it from P (the old behaviour) under-provisioned
-    exactly when buckets outnumber shards.
-    """
-    part_buckets = 10 if mode == "decimal" else P_
-    n_buckets = -(-part_buckets // P_) * P_
-    cap = min(m, max(1, -(-int(capacity_factor * m) // part_buckets)))
-    return part_buckets, n_buckets, cap
-
-
-# serializes the (miss-count snapshot, memoized construction) pairs inside
-# run_with_capacity_retries so concurrent callers never attribute each
-# other's cache misses to their own telemetry; construction is cheap (the
-# jit wrapper — actual compilation happens at call time, outside the lock)
-_RECOMPILE_COUNT_LOCK = threading.Lock()
-
-
-def run_with_capacity_retries(
-    make_fn: Callable[[int], Callable],
-    run_fn: Callable[[Callable], tuple],
-    *,
-    m: int,
-    P_: int,
-    part_buckets: int,
-    cap: int,
-    max_retries: int,
-    telemetry: Optional[Callable[..., None]],
-    lru,
-    label: str,
-):
-    """Shared capacity-doubling retry driver for the cluster sorts.
-
-    ``make_fn(cap)`` returns the compiled shard_map for one capacity (an
-    ``lru_cache``-memoized factory — ``lru`` is that factory, used to count
-    retry-forced fresh compilations); ``run_fn(fn)`` executes it and returns
-    ``(*outputs, counts, peak, overflow)``.  On success returns
-    ``(outputs, valid)`` where ``valid`` masks the real slab entries; on
-    persistent overflow raises ``RuntimeError``.  Either way the final
-    attempt's telemetry (peak per-(sender, bucket) count, overflow/retry/
-    recompile events) is reported through ``telemetry`` — the feedback
-    ``repro.engine.adapt`` turns into learned capacity factors.
-    """
-    retries, peak, recompiles = 0, 0, 0
-
-    def report(overflowed: bool) -> None:
-        if telemetry is not None:
-            telemetry(
-                m=m,
-                part_buckets=part_buckets,
-                capacity=cap,
-                peak=peak,
-                overflowed=overflowed,
-                retries=retries,
-                recompiles=recompiles,
-            )
-
-    for attempt in range(max_retries + 1):
-        if attempt:
-            cap = min(m, cap * 2)
-        with _RECOMPILE_COUNT_LOCK:
-            misses0 = lru.cache_info().misses
-            fn = make_fn(cap)
-            fresh = lru.cache_info().misses - misses0
-        if attempt:
-            # only retry attempts count: a first-call warmup compile is the
-            # normal cost of a new config, not an overflow-forced recompile
-            recompiles += fresh
-        *outs, counts, att_peak, overflow = run_fn(fn)
-        peak = max(peak, int(att_peak))
-        retries = attempt
-        if not bool(overflow):
-            report(overflowed=attempt > 0)
-            C_total = outs[0].shape[0] // P_
-            pos = jnp.arange(outs[0].shape[0]) % C_total
-            valid = pos < jnp.repeat(counts, C_total)
-            return outs, valid
-        if cap >= m:
-            break  # already loss-free capacity; more retries can't help
-    report(overflowed=True)
-    raise RuntimeError(f"{label}: capacity overflow persisted after retries")
 
 
 def cluster_sort_local(
@@ -424,14 +145,13 @@ def cluster_sort(
     m = n // P_
     part_buckets, n_buckets, cap = slab_geometry(mode, m, P_, capacity_factor)
 
-    (slab,), valid = run_with_capacity_retries(
+    (slab,), counts = run_with_capacity_retries(
         lambda c: _compiled_cluster_sort(
             mesh, axis, mode, c, part_buckets, n_buckets, digits, lo, hi,
             local_impl, block_n,
         ),
         lambda fn: fn(x),
         m=m,
-        P_=P_,
         part_buckets=part_buckets,
         cap=cap,
         max_retries=max_retries,
@@ -439,4 +159,4 @@ def cluster_sort(
         lru=_compiled_cluster_sort,
         label="cluster_sort",
     )
-    return slab, valid
+    return slab, slab_valid(slab.shape[0], counts, P_)

@@ -2,18 +2,20 @@
 
 Two feedback loops, both deterministic and clock-injectable:
 
-**Capacity learning** (model D).  ``cluster_sort`` / ``cluster_sort_kv``
-re-learn slab capacity the hard way on every call: overflow, double
-``capacity_factor``, recompile, retry — then throw the lesson away.  Here
-every call reports an ``ExchangeObservation`` (max observed per-(src, dst)
-bucket count, overflow/retry/recompile events) into an
-``ExchangeTelemetry`` ledger keyed by plan-cache cell, and a
-``CapacityLearner`` folds the history into a learned ``capacity_factor``:
-jump to ``observed peak x safety margin`` the moment a call needs more than
-the current factor, decay geometrically back toward the default while
-traffic stays mild.  The ``Planner`` persists the learned factors through
-its JSON plan cache, so a restarted serving process sizes slabs right on
-the **first** compile — zero overflow-retry recompiles in steady state.
+**Capacity learning** (model D *and* MoE dispatch).  Without it, every
+exchange call re-learns slab capacity the hard way: overflow, double
+``capacity_factor``, recompile, retry (or, on the MoE fixed path, drop
+tokens) — then throws the lesson away.  Here every call reports an
+``ExchangeObservation`` (max observed per-(src, dst) bucket count,
+overflow/retry/recompile/drop events — the schema lives in
+``repro.exchange.telemetry``) into an ``ExchangeTelemetry`` ledger keyed by
+plan-cache cell, and a ``CapacityLearner`` folds the history into a learned
+``capacity_factor``: jump to ``observed peak x safety margin`` the moment a
+call needs more than the current factor, decay geometrically back toward
+the default while traffic stays mild.  The ``Planner`` persists the learned
+factors through its JSON plan cache, so a restarted serving process sizes
+slabs (and expert token buffers) right on the **first** compile — zero
+overflow-retry recompiles in steady state.
 
 **Adaptive flush window** (async serving).  ``DelayController`` owns the
 ``AsyncSortService`` coalescing deadline: it tracks rolling arrival rate
@@ -33,7 +35,12 @@ import threading
 import time
 from collections import deque
 from dataclasses import asdict, dataclass
-from typing import Callable, Dict, Optional
+from typing import Callable
+
+from repro.exchange import ExchangeObservation, ExchangeTelemetry  # noqa: F401
+# ^ the observation schema + ledger live in the unified exchange layer now
+#   (repro.exchange.telemetry); re-exported here because this module is where
+#   the learning loop's consumers historically imported them from.
 
 __all__ = [
     "CapacityLearner",
@@ -72,86 +79,6 @@ class ManualClock:
             raise ValueError("a monotonic clock cannot go backward")
         self.t += dt
         return self.t
-
-
-@dataclass(frozen=True)
-class ExchangeObservation:
-    """One ``cluster_sort``/``cluster_sort_kv`` call's exchange telemetry.
-
-    ``peak`` is the max per-(sender, bucket) element count observed across
-    the mesh — the quantity slab capacity must cover.  ``required_factor``
-    converts it back into the smallest ``capacity_factor`` whose
-    ``slab_geometry`` capacity would have fit the call without overflow.
-
-    >>> obs = ExchangeObservation(m=128, part_buckets=8, capacity=32,
-    ...                           peak=48, overflowed=True, retries=1)
-    >>> obs.required_factor()
-    3.0
-    """
-
-    m: int                  # per-shard element count
-    part_buckets: int       # buckets the partitioner emits
-    capacity: int           # slab capacity of the final (successful) attempt
-    peak: int               # max per-(src, dst) bucket count seen
-    overflowed: bool        # any attempt overflowed
-    retries: int            # capacity-doubling retries this call paid
-    recompiles: int = 0     # fresh executables those retries compiled
-
-    def required_factor(self) -> float:
-        """Smallest ``capacity_factor`` that fits ``peak`` without overflow."""
-        return self.peak * self.part_buckets / max(self.m, 1)
-
-
-class ExchangeTelemetry:
-    """Thread-safe ledger of exchange observations, keyed by plan-cache cell.
-
-    Keeps a bounded rolling window of observations per key plus lifetime
-    totals (calls, overflow events, retries, recompiles) so long-lived
-    serving processes report recent behaviour and cumulative cost.
-
-    >>> led = ExchangeTelemetry()
-    >>> led.record("4096|int32|local/cpu", ExchangeObservation(
-    ...     m=128, part_buckets=8, capacity=32, peak=48,
-    ...     overflowed=True, retries=1))
-    >>> led.last("4096|int32|local/cpu").retries
-    1
-    >>> led.overflow_events, led.total_retries
-    (1, 1)
-    """
-
-    def __init__(self, window: int = 256):
-        self._window = window
-        self._obs: Dict[str, deque] = {}
-        self._lock = threading.Lock()
-        self.calls = 0
-        self.overflow_events = 0
-        self.total_retries = 0
-        self.total_recompiles = 0
-
-    def record(self, key: str, obs: ExchangeObservation) -> None:
-        with self._lock:
-            self._obs.setdefault(key, deque(maxlen=self._window)).append(obs)
-            self.calls += 1
-            self.overflow_events += int(obs.overflowed)
-            self.total_retries += obs.retries
-            self.total_recompiles += obs.recompiles
-
-    def last(self, key: str) -> Optional[ExchangeObservation]:
-        """Most recent observation for ``key`` (None before any call)."""
-        with self._lock:
-            window = self._obs.get(key)
-            return window[-1] if window else None
-
-    def peak_factor(self, key: str) -> float:
-        """Largest ``required_factor`` in ``key``'s rolling window (0.0 if
-        the key has never been observed)."""
-        with self._lock:
-            window = self._obs.get(key, ())
-            return max((o.required_factor() for o in window), default=0.0)
-
-    def keys(self):
-        with self._lock:
-            return sorted(self._obs)
 
 
 @dataclass(frozen=True)

@@ -20,12 +20,13 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core.cluster_sort import (
+from repro.core.radix import make_partitioner
+from repro.exchange import (
     partition_exchange,
     run_with_capacity_retries,
     slab_geometry,
+    slab_valid,
 )
-from repro.core.radix import make_partitioner
 
 __all__ = ["sort_kv", "sort_pairs", "argsort", "topk", "cluster_sort_kv"]
 
@@ -188,13 +189,12 @@ def cluster_sort_kv(
     m = n // P_
     part_buckets, n_buckets, cap = slab_geometry(mode, m, P_, capacity_factor)
 
-    (slab_k, slab_v), valid = run_with_capacity_retries(
+    (slab_k, slab_v), counts = run_with_capacity_retries(
         lambda c: _compiled_cluster_kv(
             mesh, axis, mode, c, part_buckets, n_buckets, digits, lo, hi, compress
         ),
         lambda fn: fn(keys, values),
         m=m,
-        P_=P_,
         part_buckets=part_buckets,
         cap=cap,
         max_retries=max_retries,
@@ -202,7 +202,7 @@ def cluster_sort_kv(
         lru=_compiled_cluster_kv,
         label="cluster_sort_kv",
     )
-    return slab_k, slab_v, valid
+    return slab_k, slab_v, slab_valid(slab_k.shape[0], counts, P_)
 
 
 # ---------------------------------------------------------------- front API ---

@@ -21,7 +21,11 @@ The ``learned`` section (schema v2) is the capacity-learning feedback loop's
 persistent state: per-cell capacity factors distilled from observed exchange
 telemetry (repro.engine.adapt), so a restarted serving process sizes model-D
 slabs right on its first compile.  Version-1 files load fine — they simply
-carry no learned state.
+carry no learned state.  Cells are keyed by any string the reporting path
+binds: sort cells use ``<size_bucket>|<dtype>|<mesh_fp>`` (``plan_key``),
+MoE dispatch cells use ``moe/E<experts>k<top_k>|<token_bucket>|<dtype>|
+<mesh_fp>`` (``models.moe.moe_plan_key``) — one learned table serves every
+``repro.exchange`` consumer.
 """
 from __future__ import annotations
 
@@ -396,16 +400,23 @@ class Planner:
             self.save()
         return entry
 
-    def recorder(self, n: int, dtype, mesh=None, *, default: float = 2.0):
-        """A telemetry callback for ``cluster_sort(telemetry=...)`` bound to
-        this planner and the (n, dtype, mesh) plan-cache key — the glue that
-        closes the capacity-learning loop."""
-        key = plan_key(n, dtype, mesh)
+    def exchange_recorder(self, key: str, *, default: float = 2.0):
+        """A telemetry callback bound to this planner and an arbitrary
+        plan-cache key.  Sort cells use ``(n, dtype, mesh)`` keys via
+        ``recorder``; the MoE dispatch path binds its own
+        ``moe/E<experts>k<top_k>|...`` keys (``models.moe.moe_plan_key``) —
+        one learned table, many exchange consumers."""
 
         def record(**kwargs) -> None:
             self.observe_exchange(key, ExchangeObservation(**kwargs), default=default)
 
         return record
+
+    def recorder(self, n: int, dtype, mesh=None, *, default: float = 2.0):
+        """A telemetry callback for ``cluster_sort(telemetry=...)`` bound to
+        this planner and the (n, dtype, mesh) plan-cache key — the glue that
+        closes the capacity-learning loop."""
+        return self.exchange_recorder(plan_key(n, dtype, mesh), default=default)
 
     def cluster_kwargs(
         self, n: int, dtype, mesh=None, *, default: Optional[float] = None

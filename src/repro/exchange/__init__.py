@@ -1,0 +1,54 @@
+"""repro.exchange — the unified adaptive exchange layer.
+
+One implementation of "bucket, cap, all-to-all, retry-on-overflow, learn"
+for every consumer in the codebase.  The paper's model D (one-step MSD-Radix
+data distribution, ``core/cluster_sort.py``) and GShard/Switch-style MoE
+expert dispatch (``models/moe.py``) are the same primitive wearing different
+keys: an element (sort key / token) is assigned a bucket (radix digit /
+expert id), shipped to the shard owning that bucket through a single
+fixed-capacity ``all_to_all``, processed there (local sort / expert FFN),
+and — for MoE — shipped back.  Both pay the same failure mode (a skewed
+bucket distribution overflows the fixed slabs) and both feed the same
+remedy (observed peak counts reported through ``ExchangeTelemetry`` become
+learned capacity factors in the plan cache; see ``repro.engine.adapt``).
+
+Modules:
+
+slabs      : slab/capacity math — ``sentinel_for``, ``slab_capacity``,
+             ``slab_geometry`` (model D), ``expert_capacity`` (MoE),
+             ``slab_valid``
+collective : the wire — ``partition_exchange`` / ``combine_exchange`` /
+             ``ExchangeResult`` (single all_to_all each way, optional int8
+             compression)
+retry      : ``run_with_capacity_retries`` — the capacity-doubling retry
+             driver with per-attempt recompile accounting
+telemetry  : ``ExchangeObservation`` / ``ExchangeTelemetry`` — the ledger
+             the learning loop feeds on
+
+See docs/exchange.md for the layer's design and the model-D-sort vs
+MoE-dispatch comparison.
+"""
+from .collective import ExchangeResult, combine_exchange, partition_exchange
+from .retry import run_with_capacity_retries
+from .slabs import (
+    expert_capacity,
+    sentinel_for,
+    slab_capacity,
+    slab_geometry,
+    slab_valid,
+)
+from .telemetry import ExchangeObservation, ExchangeTelemetry
+
+__all__ = [
+    "ExchangeObservation",
+    "ExchangeResult",
+    "ExchangeTelemetry",
+    "combine_exchange",
+    "expert_capacity",
+    "partition_exchange",
+    "run_with_capacity_retries",
+    "sentinel_for",
+    "slab_capacity",
+    "slab_geometry",
+    "slab_valid",
+]

@@ -1,0 +1,118 @@
+"""Slab and capacity math shared by model-D sort and MoE dispatch.
+
+SPMD has no ragged sends, so every exchange ships fixed-capacity,
+sentinel-padded slabs per (sender, bucket) pair.  All capacity rounding in
+the codebase flows through ``slab_capacity`` — ``slab_geometry`` (model-D
+sort) and ``expert_capacity`` (MoE dispatch) are two keyings of the same
+formula, so the two paths can never drift apart.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = [
+    "expert_capacity",
+    "sentinel_for",
+    "slab_capacity",
+    "slab_geometry",
+    "slab_valid",
+]
+
+
+def sentinel_for(dtype, *, largest: bool):
+    """Value that sorts after (largest) / before (smallest) all real keys —
+    what exchange slabs and sort paddings are filled with.
+
+    >>> import jax.numpy as jnp
+    >>> int(sentinel_for(jnp.int32, largest=True)) == jnp.iinfo(jnp.int32).max
+    True
+    >>> float(sentinel_for(jnp.float32, largest=False))
+    -inf
+    """
+    dtype = jnp.dtype(dtype)
+    if jnp.issubdtype(dtype, jnp.floating):
+        v = jnp.inf if largest else -jnp.inf
+    elif jnp.issubdtype(dtype, jnp.integer):
+        info = jnp.iinfo(dtype)
+        v = info.max if largest else info.min
+    else:
+        raise TypeError(f"unsupported key dtype {dtype}")
+    return jnp.asarray(v, dtype)
+
+
+def slab_capacity(m: int, buckets: int, capacity_factor: float) -> int:
+    """Per-(sender, bucket) slab capacity — THE capacity formula.
+
+    A uniform sender spreads its ``m`` elements evenly, ~``m / buckets``
+    per bucket; ``capacity_factor`` is the over-provisioning margin on top.
+    Clamped below by 1 slot (a zero-capacity slab can never drain) and above
+    by ``m`` (one sender cannot put more than all its elements into a single
+    bucket — ``capacity == m`` is the loss-free guarantee both the model-D
+    retry driver and the MoE drop path rely on).
+
+    >>> slab_capacity(1000, 8, 1.5)     # ceil(1500 / 8)
+    188
+    >>> slab_capacity(64, 4, 8.0)       # clamped to the loss-free bound m
+    64
+    >>> slab_capacity(64, 4, 0.001)     # floored at one slot
+    1
+    """
+    return min(m, max(1, -(-int(capacity_factor * m) // max(buckets, 1))))
+
+
+def slab_geometry(mode: str, m: int, P_: int, capacity_factor: float):
+    """Exchange geometry for model D: (part_buckets, n_buckets, capacity).
+
+    ``part_buckets`` is what the partitioner emits (10 in the paper's decimal
+    mode, P otherwise); ``n_buckets`` rounds it up to the nearest multiple of
+    P so ``partition_exchange``'s ``B % P == 0`` contract holds for any node
+    count (buckets 10..n_buckets-1 simply stay empty).  ``capacity`` is sized
+    per *bucket* via ``slab_capacity`` — a uniform load puts ~m/part_buckets
+    keys in each (sender, bucket) pair, so deriving it from P (the old
+    behaviour) under-provisioned exactly when buckets outnumber shards.
+
+    >>> slab_geometry("decimal", 1000, 4, 2.0)
+    (10, 12, 200)
+    >>> slab_geometry("splitters", 1000, 8, 1.5)
+    (8, 8, 188)
+    """
+    part_buckets = 10 if mode == "decimal" else P_
+    n_buckets = -(-part_buckets // P_) * P_
+    return part_buckets, n_buckets, slab_capacity(m, part_buckets, capacity_factor)
+
+
+def expert_capacity(tokens: int, top_k: int, n_experts: int,
+                    capacity_factor: float) -> int:
+    """Per-(sender, expert) token capacity for MoE dispatch.
+
+    The MoE keying of ``slab_capacity``: a sender dispatches
+    ``tokens * top_k`` (token, expert) assignments over ``n_experts``
+    buckets.  Hoisted here so the GShard-style formula in ``models/moe.py``
+    shares the sort path's rounding rules exactly (same ceil, same
+    [1, m] clamp) instead of drifting as a re-derived copy.
+
+    >>> expert_capacity(32, 2, 4, 2.0)      # ceil(2.0 * 64 / 4)
+    32
+    >>> expert_capacity(32, 2, 4, 0.01)     # floors at one slot
+    1
+    >>> expert_capacity(32, 2, 4, 8.0)      # clamped to tokens * top_k
+    64
+    """
+    return slab_capacity(tokens * top_k, n_experts, capacity_factor)
+
+
+def slab_valid(total: int, counts, P_: int):
+    """Validity mask over a gathered (P_ * C_total,) result slab.
+
+    ``counts[p]`` is shard p's real element count; entries past it in shard
+    p's ``C_total``-slot range are sentinel/zero padding.  This is how the
+    retry driver's callers turn per-shard counts into the dense mask the
+    engine compacts slabs with.
+
+    >>> import jax.numpy as jnp
+    >>> [bool(b) for b in slab_valid(4, jnp.array([1, 2]), 2)]
+    [True, False, True, True]
+    """
+    C_total = total // P_
+    pos = jnp.arange(total) % C_total
+    return pos < jnp.repeat(counts, C_total)

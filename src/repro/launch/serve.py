@@ -14,9 +14,21 @@ rate instead of pinning ``max_delay_ms``; ``--stats`` prints the full
 service ledger, including the ``overflow_retries`` / ``recompiles``
 exchange-path counters that previously vanished from serving telemetry.
 
+``--moe`` serves MoE expert routing through the adaptive exchange engine
+instead of decoding: a (deliberately skew-able, ``--moe-skew``) router
+dispatches ``--batch x --prompt-len`` tokens per step via
+``moe_apply_adaptive``, which runs at the planner's *learned* expert
+capacity factor, retries-over-drops on overflow, and feeds the telemetry
+ledger ``--stats`` prints (drop/overflow/retry/recompile counts and the
+learned factor).  Point ``$REPRO_SORT_PLANS`` at a JSON file and the
+learned capacity survives restarts — the second serve run's first step
+already sizes expert buffers right (docs/exchange.md).
+
 Usage:
   python -m repro.launch.serve --arch qwen3-0.6b --reduced --batch 4 \
       --prompt-len 32 --gen 16 [--topk-queue] [--adaptive] [--stats]
+  python -m repro.launch.serve --moe --batch 4 --prompt-len 64 --gen 8 \
+      --experts 8 --moe-skew 6.0 --stats
 """
 from __future__ import annotations
 
@@ -60,6 +72,102 @@ def sample_next(logits: jax.Array, key, *, temperature: float, top_k: int,
     return jnp.take_along_axis(idx, choice[:, None], axis=1)[:, 0].astype(jnp.int32)
 
 
+def run_moe_serving(args):
+    """--moe: serve expert routing through the adaptive exchange engine.
+
+    Every step dispatches one token batch with ``moe_apply_adaptive`` — the
+    MoE consumer of ``repro.exchange`` — through the process-wide planner,
+    so expert capacity factors are learned (and, with $REPRO_SORT_PLANS,
+    persisted) exactly like model-D sort capacities.  A skewed router pays
+    its overflow retry on the first step; every later step — and every step
+    of a restarted process — runs at the learned factor with zero retries.
+    """
+    from repro.engine.planner import default_planner
+    from repro.models.moe import (
+        MoEConfig,
+        collapse_router,
+        moe_apply_adaptive,
+        moe_init,
+        moe_plan_key,
+    )
+
+    cfg = MoEConfig(
+        d_model=64, d_ff=32, n_experts=args.experts, top_k=args.moe_top_k
+    )
+    planner = default_planner()
+    p = moe_init(jax.random.PRNGKey(args.seed), cfg, jnp.float32, ep_shards=1)
+    if args.moe_skew:
+        # worst-case routing skew, so the capacity loop has something to
+        # learn from (a fresh random router is the near-uniform case the
+        # aux loss trains toward — no overflow, no story)
+        p = collapse_router(p, args.moe_skew)
+
+    T = args.batch * args.prompt_len
+    key = moe_plan_key(T, cfg, jnp.float32)
+    rng = np.random.default_rng(args.seed)
+    led = planner.telemetry
+    # the default planner's ledger is process-wide; snapshot every counter so
+    # --stats reports this run's deltas, not whatever ran before in-process
+    base = {name: getattr(led, name) for name in (
+        "calls", "total_dropped", "total_dropped_averted", "overflow_events",
+        "total_retries", "total_recompiles")}
+    retries0 = base["total_retries"]
+
+    t_start = time.time()
+    y = None
+    first_retries = 0
+    t_warm = dt = 0.0
+    for step in range(args.gen):
+        x = jnp.asarray(rng.standard_normal((T, cfg.d_model)), jnp.float32)
+        y, aux, counts = moe_apply_adaptive(p, cfg, x, planner=planner)
+        if step == 0:
+            # step 0 pays the XLA compiles (plus any overflow-retry
+            # recompiles); keep it out of the steady-state rate
+            jax.block_until_ready(y)
+            first_retries = led.total_retries - retries0
+            t_warm = time.time() - t_start
+            t0 = time.time()
+    jax.block_until_ready(y)
+    if args.gen > 1:
+        dt = time.time() - t0
+    steady_steps = max(args.gen - 1, 1)
+
+    cf = planner.capacity_factor_for(key, default=cfg.capacity_factor)
+    steady = (
+        f"steady {dt / steady_steps * 1e3:.2f} ms/step "
+        f"({T * (args.gen - 1) / max(dt, 1e-9):.0f} tokens/s)"
+        if args.gen > 1 else "steady n/a (needs --gen >= 2)"
+    )
+    print(f"moe-serve: experts={cfg.n_experts} top_k={cfg.top_k} "
+          f"tokens/step={T} steps={args.gen}")
+    print(f"moe-serve: warmup {t_warm * 1e3:.1f} ms "
+          f"(retries={first_retries}); {steady} learned_cf={cf:.2f}")
+    if args.stats:
+        # dropped = tokens the served outputs actually lost (retry budget
+        # exhausted); dropped_averted = losses retried attempts recomputed
+        # away — the telemetry schema keeps the two separate (docs/exchange.md)
+        d = {name: getattr(led, name) - v for name, v in base.items()}
+        # routing is constant across this run's steps, so the final
+        # observation's required factor IS the run's peak requirement (the
+        # ledger-wide peak_factor would mix in pre-run in-process traffic)
+        last = led.last(key)
+        rf = last.required_factor() if d["calls"] and last else 0.0
+        print(f"moe-stats: calls={d['calls']} "
+              f"dropped={d['total_dropped']} "
+              f"dropped_averted={d['total_dropped_averted']} "
+              f"overflows={d['overflow_events']} "
+              f"retries={d['total_retries']} "
+              f"recompiles={d['total_recompiles']} "
+              f"required_factor={rf:.2f}")
+    late = led.total_retries - retries0 - first_retries
+    if late:
+        # later batches out-skewed the learned margin; the learner has
+        # already jumped again, so this is a one-off per skew level
+        print(f"moe-serve: note — {late} post-warmup retrie(s) "
+              f"(skew exceeded the learned margin; factor re-learned)")
+    return y
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=sorted(ARCHS), default="qwen3-0.6b")
@@ -83,7 +191,21 @@ def main(argv=None):
                          "overflow_retries / recompiles exchange counters "
                          "(implies --topk-queue: the ledger lives on the "
                          "sort service)")
+    ap.add_argument("--moe", action="store_true",
+                    help="serve MoE expert routing through the adaptive "
+                         "exchange engine instead of decoding; --stats "
+                         "prints drop/overflow/retry counts (docs/exchange.md)")
+    ap.add_argument("--experts", type=int, default=8,
+                    help="expert count for --moe serving")
+    ap.add_argument("--moe-top-k", type=int, default=2,
+                    help="router top-k for --moe serving")
+    ap.add_argument("--moe-skew", type=float, default=6.0,
+                    help="router logit bias onto a hot expert subset (0 = "
+                         "uniform routing, nothing for the loop to learn)")
     args = ap.parse_args(argv)
+
+    if args.moe:
+        return run_moe_serving(args)
 
     qsvc = None
     if args.topk_queue or args.adaptive or args.stats:

@@ -3,10 +3,19 @@ a first-class framework feature.
 
 Token routing *is* the paper's cluster sort (DESIGN.md §3): the expert id is
 the key's "most significant digit", expert-parallel shards are the cluster
-nodes, and dispatch is one MSD-radix ``all_to_all`` each way with **zero
-inter-shard merging** — the exact property the paper built model D for. The
+nodes, and dispatch is one MSD-radix ``all_to_all`` each way with **zero**
+inter-shard merging — the exact property the paper built model D for. The
 stable grouping sort inside ``partition_exchange`` preserves arrival order per
 expert (the paper's stability argument, doing real work here).
+
+Everything slab-shaped comes from ``repro.exchange`` (the unified adaptive
+exchange layer): ``partition_exchange``/``combine_exchange`` are the wire,
+``expert_capacity`` is the one capacity formula (shared rounding with the
+sort path's ``slab_geometry``), and ``moe_apply_adaptive`` closes the same
+capacity-learning loop model-D sort has — per-(n_experts, top_k, token
+bucket) expert capacity factors learned from observed telemetry and
+persisted in the plan cache, so a skewed routing distribution pays its
+overflow/drop penalty once per deployment, zero after restart.
 
 Layout: experts are sharded over the ``model`` mesh axis; tokens entering the
 layer are sharded over ``(pod, data, model)`` (the reshard is a free view
@@ -18,12 +27,18 @@ as an anomaly), and the aux load-balancing loss keeps the router near-uniform.
 from __future__ import annotations
 
 import math
+from functools import lru_cache
 from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.cluster_sort import combine_exchange, partition_exchange
+from repro.exchange import (
+    combine_exchange,
+    expert_capacity,
+    partition_exchange,
+    run_with_capacity_retries,
+)
 from .layers import Params, linear_init
 
 DEFAULT_CAPACITY_FACTOR = 2.0
@@ -76,16 +91,45 @@ def router_probs(p: Params, cfg: MoEConfig, x: jax.Array):
     return probs, top_idx, top_gate, aux
 
 
+def collapse_router(p: Params, logit_scale: float = 10.0) -> Params:
+    """A copy of ``p`` whose router concentrates routing on a few low-index
+    experts — the worst-case skew benchmarks/demos/tests use to exercise the
+    capacity-learning loop.
+
+    The single nonzero router column gives expert 0 logit
+    ``logit_scale * sum(x)`` while every other real expert sits at exactly
+    0: tokens with positive ``sum(x)`` route to expert 0, the rest tie at 0
+    and drain to the lowest-index remaining experts (``top_k`` ties break
+    low), so a handful of experts absorb the whole batch regardless of the
+    token distribution.
+    """
+    w = p["router"]["w"]
+    return {**p, "router": {"w": jnp.zeros_like(w).at[:, 0].set(logit_scale)}}
+
+
 def moe_apply_local(
     p: Params,
     cfg: MoEConfig,
     x: jax.Array,
     axis_name: str,
     all_axes: tuple = (),
+    *,
+    capacity: Optional[int] = None,
+    with_stats: bool = False,
 ):
     """shard_map body. x: (T_loc, D) local token slice; expert weights already
     sliced to (E_loc, ...) by shard_map in_specs. Returns (y (T_loc, D), aux,
-    overflow) with aux/overflow replicated over ``all_axes``."""
+    overflow) with aux/overflow replicated over ``all_axes``.
+
+    ``capacity`` overrides the per-(sender, expert) token capacity (default:
+    ``expert_capacity`` from ``cfg.capacity_factor`` — the shared exchange-
+    layer formula).  ``with_stats=True`` returns
+    ``(y, aux, dropped, counts, peak, overflow)`` instead: ``counts`` are
+    EP-group-global per-expert token counts, ``peak`` the max per-(sender,
+    expert) count, ``dropped`` the EP-group total of overflow-dropped tokens
+    — the exchange-telemetry signal ``moe_apply_adaptive`` reports into the
+    capacity-learning loop.
+    """
     T, D = x.shape
     ep = jax.lax.axis_size(axis_name)
     e_loc = p["w_in"].shape[0]          # local experts (already sharded)
@@ -97,7 +141,9 @@ def moe_apply_local(
     # --- dispatch = paper model D: one-step MSD-radix all_to_all ---
     keys = top_idx.reshape(-1).astype(jnp.int32)            # (T*k,) expert ids
     vals = jnp.repeat(x, cfg.top_k, axis=0)                 # (T*k, D)
-    cap = max(1, int(cfg.capacity_factor * T * cfg.top_k / max(cfg.n_experts, 1)))
+    cap = capacity if capacity is not None else expert_capacity(
+        T, cfg.top_k, cfg.n_experts, cfg.capacity_factor
+    )
     ex = partition_exchange(
         keys, vals, keys, axis_name, capacity=cap, n_buckets=e_pad,
         compress=cfg.compress_dispatch,
@@ -129,7 +175,15 @@ def moe_apply_local(
         rest = tuple(a for a in all_axes if a != axis_name)
         if rest:  # overflow is already pmax'd over the EP axis
             overflow = jax.lax.pmax(overflow, rest)
-    return out.astype(x.dtype), aux, overflow
+    out = out.astype(x.dtype)
+    if with_stats:
+        counts = jax.lax.psum(ex.counts, axis_name)         # (e_pad,) global
+        dropped = jax.lax.psum(
+            jnp.sum(jnp.maximum(ex.counts - cap, 0)), axis_name
+        )
+        peak = jax.lax.pmax(jnp.max(ex.counts), axis_name)
+        return out, aux, dropped, counts, peak, overflow
+    return out, aux, overflow
 
 
 def moe_apply_ep_replicated(
@@ -138,6 +192,9 @@ def moe_apply_ep_replicated(
     x: jax.Array,
     ep_axis: Optional[str] = None,
     all_axes: tuple = (),
+    *,
+    capacity: Optional[int] = None,
+    with_stats: bool = False,
 ):
     """MoE forward with tokens *replicated* over the EP axis (decode path, and
     the single-device fallback when ``ep_axis is None``).
@@ -146,6 +203,12 @@ def moe_apply_ep_replicated(
     then contributions are psum'd over the EP axis. No all_to_all: for tiny
     decode batches the duplicate routing FLOPs are cheaper than the collective
     latency (hypothesis H-serve in EXPERIMENTS.md §Perf).
+
+    ``capacity`` / ``with_stats`` follow ``moe_apply_local``'s contract:
+    ``with_stats=True`` returns ``(y, aux, dropped, counts, peak, overflow)``
+    with per-expert token ``counts``, the max per-expert ``peak``, and the
+    ``dropped`` token total — what ``moe_apply_adaptive`` feeds the shared
+    exchange telemetry.
     """
     T, D = x.shape
     ep = 1 if ep_axis is None else jax.lax.axis_size(ep_axis)
@@ -158,7 +221,9 @@ def moe_apply_ep_replicated(
     local = keys - my * e_loc
     mine = (local >= 0) & (local < e_loc)
     bucket = jnp.where(mine, local, e_loc)                   # trash bucket e_loc
-    cap = max(1, int(cfg.capacity_factor * T * cfg.top_k / max(cfg.n_experts, 1)))
+    cap = capacity if capacity is not None else expert_capacity(
+        T, cfg.top_k, cfg.n_experts, cfg.capacity_factor
+    )
 
     order = jnp.argsort(bucket, stable=True)
     sorted_b = bucket[order]
@@ -194,7 +259,8 @@ def moe_apply_ep_replicated(
     back = jnp.where((send_slot >= 0)[:, None], flat[safe], 0.0)
     back = back.reshape(T, cfg.top_k, D)
     out = jnp.einsum("tkd,tk->td", back.astype(jnp.float32), top_gate)
-    overflow = jnp.max(counts[:e_loc]) > cap
+    counts_real = counts[:e_loc]
+    overflow = jnp.max(counts_real) > cap
     if ep_axis is not None:
         out = jax.lax.psum(out, ep_axis)
         overflow = jax.lax.pmax(overflow, ep_axis)
@@ -203,7 +269,143 @@ def moe_apply_ep_replicated(
         rest = tuple(a for a in all_axes if a != ep_axis)
         if rest:
             overflow = jax.lax.pmax(overflow, rest)
-    return out.astype(x.dtype), aux, overflow
+    out = out.astype(x.dtype)
+    if with_stats:
+        # inside the branch so the plain (decode) forward never issues the
+        # extra collectives, jit or eager
+        dropped = jnp.sum(jnp.maximum(counts_real - cap, 0))
+        peak = jnp.max(counts_real)
+        if ep_axis is not None:
+            counts_real = jax.lax.all_gather(counts_real, ep_axis).reshape(-1)
+            dropped = jax.lax.psum(dropped, ep_axis)
+            peak = jax.lax.pmax(peak, ep_axis)
+        return out, aux, dropped, counts_real, peak, overflow
+    return out, aux, overflow
+
+
+# ------------------------------------------------------- adaptive dispatch ---
+def moe_plan_key(tokens: int, cfg: MoEConfig, dtype=jnp.float32, mesh=None) -> str:
+    """Plan-cache cell for MoE expert-capacity learning.
+
+    Keyed per (n_experts, top_k, pow2 token bucket, dtype, mesh fingerprint)
+    — the quantities ``expert_capacity`` depends on — so skew learned for one
+    routing shape never bleeds into another.  Lives in the same ``learned``
+    table as the sort cells (docs/plan-cache.md).
+    """
+    from repro.core.bitonic import next_pow2
+    from repro.engine.planner import mesh_fingerprint
+
+    return (
+        f"moe/E{cfg.n_experts}k{cfg.top_k}|{next_pow2(tokens)}"
+        f"|{jnp.dtype(dtype).name}|{mesh_fingerprint(mesh)}"
+    )
+
+
+@lru_cache(maxsize=256)
+def _compiled_moe_replicated(cfg: MoEConfig, capacity: int):
+    """One jitted single-host forward per (config, capacity) — the factory
+    ``run_with_capacity_retries`` counts retry-forced fresh compiles on."""
+
+    def f(p, x):
+        return moe_apply_ep_replicated(p, cfg, x, capacity=capacity, with_stats=True)
+
+    return jax.jit(f)
+
+
+def moe_apply_adaptive(
+    p: Params,
+    cfg: MoEConfig,
+    x: jax.Array,
+    *,
+    planner=None,
+    capacity_factor: Optional[float] = None,
+    telemetry=None,
+    max_retries: int = 4,
+):
+    """Adaptive single-host MoE forward: learned capacity, retry over drop.
+
+    The MoE twin of the adaptive ``cluster_sort`` path.  Runs
+    ``moe_apply_ep_replicated`` at the learned expert capacity factor for
+    this (n_experts, top_k, token bucket) cell, retries with doubled
+    capacity when the router's skew overflows it (``capacity == T * top_k``
+    is the loss-free bound, so retries always converge), and reports the
+    call's exchange telemetry — peak per-expert token count, overflow/
+    retry/recompile events, and drop counts (``dropped`` = tokens the served
+    output actually lost, ``dropped_averted`` = tokens retried attempts
+    would have lost) — through the planner, which folds it into a persisted
+    capacity factor:
+    a skewed routing distribution pays its overflow penalty once per
+    deployment, zero after restart.  When retries are exhausted the last
+    attempt's output is returned with its drops intact (GShard semantics)
+    rather than raising — serving must degrade, not die.
+
+    By default the loop runs through ``planner`` (the process-wide default
+    planner when None); passing an explicit ``capacity_factor=`` or
+    ``telemetry=`` opts the call out of the whole loop, reading and
+    writing, exactly like the sort paths.
+
+    Returns ``(y, aux, counts)`` with per-expert token ``counts`` — the
+    final attempt never overflowed unless retries were exhausted, so unlike
+    the fixed path there is no overflow flag to thread through.
+    """
+    T, _ = x.shape
+    m = T * cfg.top_k
+    if capacity_factor is None and telemetry is None:
+        from repro.engine.planner import default_planner
+
+        planner = planner or default_planner()
+        key = moe_plan_key(T, cfg, x.dtype)
+        capacity_factor = planner.capacity_factor_for(
+            key, default=cfg.capacity_factor
+        )
+        telemetry = planner.exchange_recorder(key, default=cfg.capacity_factor)
+    elif capacity_factor is None:
+        capacity_factor = cfg.capacity_factor
+    cap = expert_capacity(T, cfg.top_k, cfg.n_experts, capacity_factor)
+    # cfg.capacity_factor is dead inside the compiled forward (capacity is
+    # explicit), so normalize it out of the compile-cache key: two defaults
+    # over the same architecture share one executable per capacity
+    ccfg = cfg._replace(capacity_factor=0.0)
+
+    attempt_drops = []
+
+    def run_fn(fn):
+        out, aux, dropped, counts, peak, overflow = fn(p, x)
+        attempt_drops.append(int(dropped))
+        return out, aux, counts, peak, overflow
+
+    report = telemetry
+    if telemetry is not None:
+        def report(**kwargs):
+            # the driver reports once, after the final attempt; routing (and
+            # so per-attempt drops) is identical across attempts, only the
+            # capacity moves — the final attempt's drops reached the served
+            # output iff it still overflowed (peak > its capacity), every
+            # earlier attempt's were recomputed away by the retry
+            served = (
+                attempt_drops[-1]
+                if attempt_drops and kwargs["peak"] > kwargs["capacity"]
+                else 0
+            )
+            # later attempts re-drop a subset of the first attempt's tokens,
+            # so distinct at-risk tokens = the first (largest) attempt's
+            # count, not the sum across attempts
+            averted = max(attempt_drops, default=0) - served
+            telemetry(dropped=served, dropped_averted=averted, **kwargs)
+
+    (y, aux), counts = run_with_capacity_retries(
+        lambda c: _compiled_moe_replicated(ccfg, c),
+        run_fn,
+        m=m,
+        part_buckets=max(cfg.n_experts, 1),
+        cap=cap,
+        max_retries=max_retries,
+        telemetry=report,
+        lru=_compiled_moe_replicated,
+        label="moe_apply_adaptive",
+        strict=False,
+    )
+    return y, aux, counts
 
 
 def moe_shard_specs(params: Params, mesh_axes=("pod", "data", "model"), ep_axis="model"):

@@ -5,8 +5,9 @@ Three checks, any failure exits non-zero:
 1. every fenced code block in ``docs/*.md`` that contains ``>>>`` lines runs
    as a doctest (shared namespace per file, so later blocks may use earlier
    imports);
-2. every public export of ``repro`` and ``repro.engine`` has a docstring
-   with at least one executable ``>>>`` example, and all those examples pass;
+2. every public export of ``repro``, ``repro.engine``, and ``repro.exchange``
+   has a docstring with at least one executable ``>>>`` example, and all
+   those examples pass;
 3. every relative markdown link in ``docs/*.md`` and ``README.md`` resolves
    to a real file in the repo.
 
@@ -77,11 +78,12 @@ def check_markdown_doctests() -> int:
 def check_api_docstrings() -> int:
     import repro
     import repro.engine
+    import repro.exchange
 
     failures = 0
     runner = doctest.DocTestRunner(optionflags=doctest.NORMALIZE_WHITESPACE)
     finder = doctest.DocTestFinder(recurse=False)
-    for mod in (repro, repro.engine):
+    for mod in (repro, repro.engine, repro.exchange):
         for name in mod.__all__:
             obj = getattr(mod, name)
             doc = getattr(obj, "__doc__", None)

@@ -19,14 +19,27 @@ hybrid wins small sizes, the cluster MSD-radix model wins large ones — where
 the crossover sits depends on the machine, which is exactly why it's
 measured, not hard-coded.
 
+The ``frontend`` section benches the multi-tenant SLO front door
+(``repro.engine.frontend``): warm-vs-cold wall-clock replay (what AOT
+``warmup`` buys on first-request latency and SLO goodput) and two
+deterministic ManualClock overload simulations (one saturated tenant; three
+tenants with a Zipf-skewed rate split) reporting p50/p95/p99 + goodput.
+
 Prints ``name,us_per_call,derived`` CSV rows (benchmark harness contract).
+``--snapshot out.json`` also writes the rows machine-readably (schema in
+docs/benchmarks.md) and ``--compare prev.json`` diffs against an earlier
+snapshot, exiting nonzero when any shared row regresses beyond
+``--threshold`` (time ratio) or loses more than 0.05 goodput.
 
   PYTHONPATH=src python benchmarks/engine_bench.py            # full sweep
   PYTHONPATH=src python benchmarks/engine_bench.py --smoke    # CI-sized
+  PYTHONPATH=src python benchmarks/engine_bench.py --smoke \
+      --sections frontend --snapshot BENCH_new.json --compare BENCH_PR6.json
 """
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import sys
 import time
@@ -166,13 +179,179 @@ def moe_rows(rng, *, reps: int, smoke: bool):
     )]
 
 
+def frontend_rows(rng, *, reps: int, smoke: bool):
+    """Multi-tenant SLO frontend: AOT warm-vs-cold, then overload behaviour.
+
+    Warm-vs-cold replays one wall-clock trace twice — against a cold
+    compiled cache (the percentiles eat first-request compile stalls) and
+    against an AOT-warmed one (``SortFrontend.warmup``) — so the delta is
+    exactly what engine-level warmup buys.  The overload rows are
+    deterministic ManualClock discrete-event simulations (seeded trace,
+    fixed cost model): byte-for-byte reproducible, which is what makes
+    their p50/p95/p99 + goodput values regression-gateable via --compare.
+    """
+    from repro.engine import SortFrontend, SortService, Tenant, make_trace, run_load
+    from repro.engine.adapt import ManualClock
+    from repro.engine.frontend import (
+        linear_service_time, replay_wallclock, zipf_shares,
+    )
+
+    rows = []
+
+    # --- warm vs cold first requests: real executables, wall clock ---------
+    sizes = (256, 1024) if smoke else (256, 1024, 4096)
+    slo_ms = 250.0
+    trace = make_trace(duration_s=0.5 if smoke else 1.5,
+                       rates={"web": 30.0}, sizes=sizes, seed=11)
+    for mode in ("cold", "warm"):
+        fe = SortFrontend(SortService(),
+                          tenants=[Tenant("web", slo_ms=slo_ms)],
+                          max_batch=8, shed_expired=False, start=True)
+        if mode == "warm":
+            fe.warmup(cells=[(s, "int32") for s in sizes], kinds=("sort",))
+        misses_before = fe.service.cache.stats()["misses"]
+        rep = replay_wallclock(fe, trace, seed=11)
+        fe.close()
+        compiles = fe.service.cache.stats()["misses"] - misses_before
+        rows.append((
+            f"frontend/serving_{mode}/slo={slo_ms:g}ms",
+            rep.latency_percentiles()[95] * 1e6,
+            rep.derived() + f";compiles_in_traffic={compiles}",
+        ))
+
+    # --- overload simulations: deterministic ManualClock ------------------
+    # cost model capacity ~ max_batch / base_ms = 800 req/s; both traces
+    # offer 1200 req/s, so the scheduler must shed / miss ~1/3 of load
+    cost = linear_service_time(base_ms=5.0, us_per_key=0.02)
+    dur = 1.0 if smoke else 3.0
+
+    clk = ManualClock()
+    fe = SortFrontend(SortService(), tenants=[Tenant("solo", slo_ms=40.0)],
+                      max_batch=4, maxsize=64, clock=clk)
+    tr = make_trace(duration_s=dur, rates={"solo": 1200.0},
+                    sizes=(256, 512), seed=5)
+    rep = run_load(fe, tr, clock=clk, service_time=cost)
+    rows.append((
+        "frontend/overload_sim_1tenant/rate=1200",
+        rep.latency_percentiles()[95] * 1e6,
+        rep.derived(),
+    ))
+
+    shares = zipf_shares(3, 2.0)   # ~0.73 / 0.18 / 0.08 of the offered load
+    names = ("web", "mobile", "batch")
+    clk = ManualClock()
+    fe = SortFrontend(
+        SortService(),
+        tenants=[Tenant("web", weight=2.0, priority=0, slo_ms=40.0),
+                 Tenant("mobile", weight=1.0, priority=0, slo_ms=40.0),
+                 Tenant("batch", weight=1.0, priority=1, slo_ms=200.0)],
+        max_batch=4, maxsize=64, clock=clk,
+    )
+    tr = make_trace(duration_s=dur,
+                    rates={n: 1200.0 * s for n, s in zip(names, shares)},
+                    sizes=(256, 512), seed=5)
+    rep = run_load(fe, tr, clock=clk, service_time=cost)
+    rows.append((
+        "frontend/overload_sim_3tenant_skew/rate=1200",
+        rep.latency_percentiles()[95] * 1e6,
+        rep.derived(),
+    ))
+    for n in names:
+        rows.append((
+            f"frontend/overload_sim_3tenant_skew/tenant={n}",
+            rep.latency_percentiles(tenant=n)[95] * 1e6,
+            rep.derived(n),
+        ))
+    return rows
+
+
+def parse_derived(derived: str) -> dict:
+    """``k=v;k=v`` derived column -> dict (floats where they parse)."""
+    out = {}
+    for part in filter(None, derived.split(";")):
+        if "=" not in part:
+            continue
+        k, v = part.split("=", 1)
+        try:
+            out[k] = float(v[:-1] if v.endswith("x") else v)
+        except ValueError:
+            out[k] = v
+    return out
+
+
+def write_snapshot(path: str, rows, config: dict) -> None:
+    """Persist rows as a BENCH_*.json snapshot (schema: docs/benchmarks.md)."""
+    payload = {
+        "schema": "repro-engine-bench/v1",
+        "created": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "config": config,
+        "rows": [
+            {"name": name, "us": round(us, 3), "derived": parse_derived(d)}
+            for name, us, d in rows
+        ],
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"# snapshot written to {path}", file=sys.stderr)
+
+
+def compare_snapshots(prev_path: str, rows, *, threshold: float,
+                      goodput_slack: float = 0.05):
+    """Diff current rows against a snapshot; returns the regression list.
+
+    A shared row regresses when its time ratio (new/old) exceeds
+    ``threshold`` or its ``goodput`` derived value drops by more than
+    ``goodput_slack``.  Rows only one side has are reported but never fail.
+    """
+    with open(prev_path) as f:
+        prev = json.load(f)
+    if prev.get("schema") != "repro-engine-bench/v1":
+        raise SystemExit(f"unrecognized snapshot schema in {prev_path}")
+    prev_rows = {r["name"]: r for r in prev["rows"]}
+    regressions = []
+    for name, us, d in rows:
+        old = prev_rows.pop(name, None)
+        if old is None:
+            print(f"# compare {name}: new row (no baseline)", file=sys.stderr)
+            continue
+        ratio = us / old["us"] if old["us"] > 0 else 1.0
+        msg = f"# compare {name}: {old['us']:.1f} -> {us:.1f} us ({ratio:.2f}x)"
+        if ratio > threshold:
+            regressions.append(f"{name}: {ratio:.2f}x slower (>{threshold}x)")
+            msg += "  REGRESSION"
+        new_gp = parse_derived(d).get("goodput")
+        old_gp = old["derived"].get("goodput")
+        if isinstance(new_gp, float) and isinstance(old_gp, float):
+            msg += f" goodput {old_gp:.3f} -> {new_gp:.3f}"
+            if old_gp - new_gp > goodput_slack:
+                regressions.append(
+                    f"{name}: goodput {old_gp:.3f} -> {new_gp:.3f} "
+                    f"(lost >{goodput_slack})"
+                )
+                msg += "  REGRESSION"
+        print(msg, file=sys.stderr)
+    for name in prev_rows:
+        print(f"# compare {name}: row vanished from this run", file=sys.stderr)
+    return regressions
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true", help="tiny sizes for CI")
     ap.add_argument("--sizes", default="", help="comma-separated overrides")
     ap.add_argument("--reps", type=int, default=0, help="0 = auto")
     ap.add_argument("--plans", default="", help="persist tuned plans to this JSON")
+    ap.add_argument("--sections", default="crossover,serving,moe,frontend",
+                    help="comma-separated row groups to run")
+    ap.add_argument("--snapshot", default="",
+                    help="write rows to this BENCH_*.json")
+    ap.add_argument("--compare", default="",
+                    help="diff against this snapshot; nonzero exit on regression")
+    ap.add_argument("--threshold", type=float, default=1.5,
+                    help="time-ratio regression bound for --compare")
     args = ap.parse_args(argv)
+    sections = {s.strip() for s in args.sections.split(",") if s.strip()}
 
     from repro.engine.planner import (
         PALLAS_INTERPRET_MAX,
@@ -196,6 +375,8 @@ def main(argv=None):
     rng = np.random.default_rng(0)
     rows = []
 
+    if "crossover" not in sections:
+        sizes = []
     strategies = {
         "A_shared_merge": plan_from_strategy("shared_merge"),
         "B_shared_hybrid": plan_from_strategy("shared_hybrid"),
@@ -232,14 +413,31 @@ def main(argv=None):
         )
         rows.append((f"engine/default_rule/n={n}", t_default, ""))
 
-    rows += serving_rows(rng, reps=max(reps, 2), smoke=args.smoke)
-    rows += moe_rows(rng, reps=reps, smoke=args.smoke)
+    if "serving" in sections:
+        rows += serving_rows(rng, reps=max(reps, 2), smoke=args.smoke)
+    if "moe" in sections:
+        rows += moe_rows(rng, reps=reps, smoke=args.smoke)
+    if "frontend" in sections:
+        rows += frontend_rows(rng, reps=max(reps, 2), smoke=args.smoke)
 
     if args.plans:
         planner.save()
         print(f"# tuned plans saved to {args.plans}", file=sys.stderr)
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
+    if args.snapshot:
+        write_snapshot(args.snapshot, rows, {
+            "smoke": args.smoke, "sizes": args.sizes, "reps": reps,
+            "sections": sorted(sections),
+        })
+    if args.compare:
+        regressions = compare_snapshots(args.compare, rows,
+                                        threshold=args.threshold)
+        if regressions:
+            for r in regressions:
+                print(f"REGRESSION: {r}", file=sys.stderr)
+            raise SystemExit(1)
+        print(f"# compare vs {args.compare}: no regressions", file=sys.stderr)
     return rows
 
 

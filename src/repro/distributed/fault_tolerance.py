@@ -62,6 +62,33 @@ class AnomalyMonitor:
     grad_norm_limit: float = 1e4
     overflow_patience: int = 10      # consecutive MoE-overflow steps tolerated
     _overflow_streak: int = 0
+    _pending_dropped: int = 0        # served drops reported since last check()
+    _dropped_total: int = 0
+
+    def watch_exchange(self, telemetry: Any) -> "AnomalyMonitor":
+        """Subscribe to an ``ExchangeTelemetry`` ledger's observation stream.
+
+        Each ``ExchangeObservation.dropped`` (tokens the *served* MoE output
+        actually lost — fixed-capacity or retry-exhausted dispatch) accrues
+        into a pending counter that the next ``check`` treats as an
+        ``moe_overflow`` step even when the training metrics themselves
+        don't carry the flag.  Averted drops (loss-free retries) don't
+        count: the routing-collapse signal is about corrupted output, not
+        about retry cost.  Returns self so construction chains.
+        """
+        telemetry.subscribe(self._on_exchange)
+        return self
+
+    def _on_exchange(self, key: str, obs: Any) -> None:
+        dropped = int(getattr(obs, "dropped", 0))
+        if dropped > 0:
+            self._pending_dropped += dropped
+            self._dropped_total += dropped
+
+    @property
+    def dropped_total(self) -> int:
+        """Lifetime served-output drops seen via ``watch_exchange``."""
+        return self._dropped_total
 
     def check(self, metrics: dict) -> None:
         loss = float(metrics.get("loss", 0.0))
@@ -70,12 +97,14 @@ class AnomalyMonitor:
         gn = float(metrics.get("grad_norm", 0.0))
         if gn > self.grad_norm_limit:
             raise TrainingAnomaly(f"grad norm {gn:.3e} above limit")
-        if bool(metrics.get("moe_overflow", False)):
+        dropped, self._pending_dropped = self._pending_dropped, 0
+        if bool(metrics.get("moe_overflow", False)) or dropped > 0:
             self._overflow_streak += 1
             if self._overflow_streak >= self.overflow_patience:
                 raise TrainingAnomaly(
                     f"MoE capacity overflow for {self._overflow_streak} consecutive "
-                    "steps (routing collapse) — raise capacity_factor or restore"
+                    f"steps (routing collapse; {self._dropped_total} tokens dropped "
+                    "from served output) — raise capacity_factor or restore"
                 )
         else:
             self._overflow_streak = 0

@@ -12,6 +12,10 @@ kv       : sort_kv / argsort / sort_pairs / topk — records, not just keys
 service  : SortService — ragged batches in, zero-recompile sorts out
 queue    : AsyncSortService — async request queue that micro-batches
            individual submit_async calls across callers (docs/serving.md)
+frontend : SLO-aware multi-tenant serving front end — AOT warmup of the
+           whole plan-cache executable ladder, per-tenant weighted
+           admission with EDF dispatch and reject-with-reason load shed,
+           and a reproducible open-loop load harness (docs/serving.md)
 
 See docs/architecture.md for the layer map and request lifecycle.
 """
@@ -34,6 +38,17 @@ from .planner import (
     plan_from_strategy,
     plan_key,
     run_plan,
+)
+from .frontend import (
+    LoadReport,
+    ShedError,
+    SortFrontend,
+    Tenant,
+    Ticket,
+    WarmupReport,
+    make_trace,
+    run_load,
+    warmup,
 )
 from .queue import AsyncSortService, QueueStats
 from .service import ServiceStats, SortService
@@ -64,4 +79,13 @@ __all__ = [
     "SortService",
     "AsyncSortService",
     "QueueStats",
+    "LoadReport",
+    "ShedError",
+    "SortFrontend",
+    "Tenant",
+    "Ticket",
+    "WarmupReport",
+    "make_trace",
+    "run_load",
+    "warmup",
 ]

@@ -76,6 +76,19 @@ class CompiledCache:
         self.executables[key] = exe
         return exe
 
+    def __contains__(self, key: Tuple) -> bool:
+        """Is ``key``'s executable already compiled (warm)?
+
+        >>> CompiledCache().__contains__(("sort", 8))
+        False
+        """
+        return key in self.executables
+
+    def keys(self):
+        """The compiled cells, in insertion (= warmup/serve) order — what an
+        AOT ``warmup`` pass has actually made hot."""
+        return list(self.executables)
+
     def stats(self) -> dict:
         return {
             "entries": len(self.executables),

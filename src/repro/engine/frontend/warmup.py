@@ -1,0 +1,157 @@
+"""AOT warmup: compile the whole executable ladder before traffic arrives.
+
+A lazily-compiling serving process pays jax tracing + XLA compilation on the
+first request of every (kind, length bucket, batch bucket, dtype, direction)
+cell — tens to hundreds of milliseconds of first-request latency that steady
+state never sees again.  A production front end compiles its whole bucket
+ladder ahead of time instead (the ``warmup()``/``interesting_buckets``
+pattern MLPerf-style inference servers use): ``warmup(service, plan_table)``
+enumerates every (size bucket, dtype) cell the plan cache names
+(``Planner.warmup_cells`` — tuned plans *and* learned-capacity cells, i.e.
+everywhere real traffic has ever landed), crosses it with the request kinds
+and the pow2 batch-bucket ladder the service pads into, and compiles each
+cell through the exact executable-identity path serving uses
+(``SortService.warm_cell`` -> ``_signature``).  After warmup, a request for
+any warmed cell is a pure cache hit: **zero** fresh jax lowerings, proven
+with jax's compilation counters in tests/test_frontend.py.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Iterable, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..cache import size_bucket
+from ..planner import Planner
+from ..service import SortService
+
+__all__ = ["WarmupReport", "batch_bucket_ladder", "warmup"]
+
+
+def batch_bucket_ladder(max_batch: int) -> Tuple[int, ...]:
+    """The pow2 batch buckets serving can pad a coalesced batch into.
+
+    A scheduler flushing up to ``max_batch`` requests produces batches of
+    every size in ``1..max_batch``; the service pads each to its pow2 batch
+    bucket, so these — and only these — batch shapes can ever compile.
+
+    >>> batch_bucket_ladder(8)
+    (1, 2, 4, 8)
+    >>> batch_bucket_ladder(6)
+    (1, 2, 4, 8)
+    """
+    ladder = []
+    bb = 1
+    while bb < max_batch:
+        ladder.append(bb)
+        bb *= 2
+    ladder.append(bb)
+    return tuple(ladder)
+
+
+@dataclass
+class WarmupReport:
+    """What one ``warmup`` call compiled (and skipped as already warm).
+
+    ``cells`` lists every executable cell visited as
+    ``(kind, bucket, dtype, batch_bucket, ascending)``; ``compiled`` counts
+    the fresh executables this call built, ``cached`` the cells that were
+    already warm (a second warmup is a fast no-op), ``elapsed_s`` the wall
+    time the compiles took — the latency the *first requests* would have
+    paid without warmup.
+
+    >>> WarmupReport(cells=[], compiled=0, cached=0, elapsed_s=0.0).compiled
+    0
+    """
+
+    cells: list = field(default_factory=list)
+    compiled: int = 0
+    cached: int = 0
+    elapsed_s: float = 0.0
+
+    def summary(self) -> str:
+        """One printable line for serve drivers' ``--warmup`` output."""
+        return (
+            f"warmup: {len(self.cells)} cells, {self.compiled} compiled, "
+            f"{self.cached} already warm, {self.elapsed_s * 1e3:.0f} ms"
+        )
+
+
+def warmup(
+    service: Optional[SortService] = None,
+    plan_table: Optional[Planner] = None,
+    *,
+    cells: Optional[Iterable[Tuple[int, object]]] = None,
+    kinds: Sequence[str] = ("sort", "argsort"),
+    max_batch: int = 16,
+    ascending: Sequence[bool] = (True,),
+    values_spec: Optional[Tuple[tuple, object]] = None,
+    mesh=None,
+) -> WarmupReport:
+    """AOT-compile every executable cell the plan table names.
+
+    Parameters
+    ----------
+    service:    the ``SortService`` whose compiled cache to warm (a fresh one
+                by default — but warming a fresh private service is rarely
+                what you want: pass the service your scheduler serves on).
+    plan_table: the ``Planner`` whose plan-cache keys enumerate the (bucket,
+                dtype) cells; defaults to ``service.planner``.  Cells come
+                from ``Planner.warmup_cells(mesh)`` — every key the tuned
+                ``plans`` table or the ``learned`` capacity section holds for
+                this hardware fingerprint.
+    cells:      explicit extra ``(size, dtype)`` cells to warm in addition to
+                (or, with an empty plan table, instead of) the enumerated
+                ones — sizes are bucketed with ``size_bucket`` first, so any
+                expected request length works.
+    kinds:      request kinds to compile per cell.  ``sort_kv`` requires
+                ``values_spec=(trailing value shape, value dtype)``.
+    max_batch:  top of the pow2 batch-bucket ladder — use the scheduler's
+                ``max_batch`` so every flushable batch shape is covered.
+    ascending:  sort directions to compile (descending argsort is the
+                serving top-k shape: ``ascending=(False,)``).
+    mesh:       hardware fingerprint to enumerate plan cells for (None =
+                this process's local fingerprint, the serving case).
+
+    >>> svc = SortService(planner=Planner())   # hermetic plan table
+    >>> rep = warmup(svc, cells=[(1000, "int32")], kinds=("sort",),
+    ...              max_batch=2)
+    >>> (rep.compiled, rep.cached)            # (1024,)x{1,2}: two cells
+    (2, 0)
+    >>> warmup(svc, cells=[(1000, "int32")], kinds=("sort",),
+    ...        max_batch=2).compiled          # idempotent: already warm
+    0
+    """
+    service = service if service is not None else SortService()
+    planner = plan_table if plan_table is not None else service.planner
+    targets = list(planner.warmup_cells(mesh))
+    if cells is not None:
+        for n, dtype in cells:
+            targets.append(
+                (size_bucket(int(n), min_bucket=service.min_bucket),
+                 np.dtype(dtype).name)
+            )
+    # dedupe while keeping deterministic order
+    targets = sorted(set(targets))
+
+    report = WarmupReport()
+    t0 = time.perf_counter()
+    for bucket, dtype_name in targets:
+        for kind in kinds:
+            for asc in ascending:
+                for bb in batch_bucket_ladder(max_batch):
+                    fresh = service.warm_cell(
+                        kind,
+                        bucket,
+                        dtype_name,
+                        batch_bucket=bb,
+                        ascending=asc,
+                        values_spec=values_spec if kind == "sort_kv" else None,
+                    )
+                    report.cells.append((kind, bucket, dtype_name, bb, asc))
+                    report.compiled += int(fresh)
+                    report.cached += int(not fresh)
+    report.elapsed_s = time.perf_counter() - t0
+    return report

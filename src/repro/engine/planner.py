@@ -339,6 +339,34 @@ class Planner:
     def lookup(self, n: int, dtype, mesh=None) -> Optional[SortPlan]:
         return self.plans.get(plan_key(n, dtype, mesh))
 
+    def warmup_cells(self, mesh=None):
+        """The (size_bucket, dtype name) cells this plan table names for the
+        given hardware fingerprint — the enumeration AOT warmup compiles
+        ahead of traffic (``repro.engine.frontend.warmup``).
+
+        Both the tuned ``plans`` table and the ``learned`` capacity section
+        contribute: a cell with learned state but no tuned plan still proves
+        real traffic landed there, and warming it is exactly as valuable.
+        Non-sort keys (the MoE dispatch cells, ``moe/E<e>k<k>|...``) are not
+        executable-cache cells and are skipped.
+
+        >>> p = Planner()
+        >>> p.plans["4096|int32|" + mesh_fingerprint()] = SortPlan("shared")
+        >>> p.plans["moe/E8k2|256|float32|" + mesh_fingerprint()] = SortPlan()
+        >>> p.warmup_cells()
+        [(4096, 'int32')]
+        """
+        fp = mesh_fingerprint(mesh)
+        cells = set()
+        for key in list(self.plans) + list(self.learned):
+            parts = key.split("|")
+            if len(parts) != 3 or not parts[0].isdigit():
+                continue  # MoE dispatch cells and future non-sort keys
+            bucket, dtype_name, key_fp = parts
+            if key_fp == fp:
+                cells.add((int(bucket), dtype_name))
+        return sorted(cells)
+
     def plan_for(self, n: int, dtype, mesh=None) -> SortPlan:
         """Tuned plan if one exists, else the pre-engine default rule — with
         the learned capacity factor folded into cluster plans, so steady-state

@@ -74,6 +74,24 @@ class QueueStats(ServiceStats):
     queue_latency_s: deque = field(
         default_factory=lambda: deque(maxlen=8192), repr=False
     )
+    # multi-tenant accounting (repro.engine.frontend): every load-shed is
+    # attributed to the tenant that suffered it and the reason it fired, and
+    # every served request lands in its tenant's tally — overload debugging
+    # starts from "who was shed, and why", not from a global counter
+    shed: Dict[str, Dict[str, int]] = field(default_factory=dict, repr=False)
+    tenant_served: Dict[str, int] = field(default_factory=dict, repr=False)
+
+    def observe_shed(self, tenant: str, reason: str) -> None:
+        """Attribute one load-shed to ``tenant`` with its ``reason``
+        (``'tenant_backlog'`` / ``'global_backlog'`` / ``'deadline'``)."""
+        self.rejected += 1
+        per = self.shed.setdefault(tenant, {})
+        per[reason] = per.get(reason, 0) + 1
+
+    def shed_total(self, tenant: Optional[str] = None) -> int:
+        """Total sheds — for one tenant, or across all tenants."""
+        tenants = [tenant] if tenant is not None else list(self.shed)
+        return sum(sum(self.shed.get(t, {}).values()) for t in tenants)
 
     def observe_batch(self, *, n_requests: int, capacity: int, latencies) -> None:
         """Record one executed micro-batch (size, fill vs ``max_batch``, and

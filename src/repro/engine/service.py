@@ -207,6 +207,75 @@ class SortService:
             gk += (val.shape[1:], val.dtype.name)
         return gk
 
+    def _signature(self, kind: str, gk: tuple, bb: int, ascending: bool):
+        """The full executable identity of one (group key, batch bucket) cell:
+        (plan, cache key, ShapeDtypeStruct args).  ``_run_group`` and
+        ``warm_cell`` both derive their compilations from this one function,
+        which is what makes AOT warmup airtight — a warmed cell *is* the
+        serving cell, not a lookalike."""
+        bucket, dtype_name = gk[0], gk[1]
+        plan = self.planner.plan_for(bucket, np.dtype(dtype_name))
+        if plan.strategy != "shared":  # front door is single-host
+            plan = SortPlan("shared")
+        # the executable identity is exactly the plan fields this kind
+        # consumes (block_n changes the traced program for pallas plans)
+        impl, block_n, n_threads = self._plan_fields(kind, plan)
+        key = (kind, bucket, bb, dtype_name, ascending,
+               impl, n_threads, block_n)
+        args = [jax.ShapeDtypeStruct((bb, bucket), jnp.dtype(dtype_name))]
+        if kind == "sort_kv":
+            vshape, vdtype = gk[2], np.dtype(gk[3])
+            key = key + (vshape, vdtype.name)
+            args.append(
+                jax.ShapeDtypeStruct((bb, bucket) + vshape, jnp.dtype(vdtype))
+            )
+        return plan, key, args
+
+    def warm_cell(
+        self,
+        kind: str,
+        bucket: int,
+        dtype,
+        *,
+        batch_bucket: int = 1,
+        ascending: bool = True,
+        values_spec: Optional[Tuple[tuple, Any]] = None,
+    ) -> bool:
+        """AOT-compile one executable cell before traffic arrives.
+
+        The cell is identified exactly the way serving identifies it —
+        (kind, length bucket, batch bucket, dtype, direction, plan fields) —
+        so any later request that lands in a warmed cell is a pure cache hit:
+        zero jax tracing, first-request latency == steady-state latency.
+        Returns True when this call compiled a fresh executable, False when
+        the cell was already warm.
+
+        ``values_spec`` (trailing value shape, value dtype) is required
+        semantics for ``kind='sort_kv'`` and defaults to scalar int32 values.
+
+        >>> svc = SortService()
+        >>> svc.warm_cell("sort", 1024, "int32")
+        True
+        >>> svc.warm_cell("sort", 1024, "int32")   # already warm
+        False
+        """
+        gk: tuple = (int(bucket), np.dtype(dtype).name)
+        if kind == "sort_kv":
+            vshape, vdtype = values_spec if values_spec else ((), np.int32)
+            gk += (tuple(vshape), np.dtype(vdtype).name)
+        elif values_spec is not None:
+            raise ValueError("values_spec= only applies to kind='sort_kv'")
+        if kind not in _KINDS:
+            raise ValueError(f"kind must be one of {_KINDS}")
+        plan, key, args = self._signature(kind, gk, int(batch_bucket), ascending)
+        with self._lock:
+            before = self.cache.misses
+            self.cache.get_or_build(key, self._builder(kind, plan, ascending), args)
+            fresh = self.cache.misses - before
+            self.stats.compiles += fresh
+            self.stats.cache_hits += int(fresh == 0)
+        return bool(fresh)
+
     # ----------------------------------------------------------- execution ---
     def _run_group(
         self,
@@ -232,23 +301,13 @@ class SortService:
         for row, r in enumerate(reqs):
             batch[row, : len(r)] = r
 
-        plan = self.planner.plan_for(bucket, dtype)
-        if plan.strategy != "shared":  # front door is single-host
-            plan = SortPlan("shared")
-        # the executable identity is exactly the plan fields this kind
-        # consumes (block_n changes the traced program for pallas plans)
-        impl, block_n, n_threads = self._plan_fields(kind, plan)
-        key = (kind, bucket, bb, dtype_name, ascending,
-               impl, n_threads, block_n)
-        args = [jax.ShapeDtypeStruct((bb, bucket), jnp.dtype(dtype))]
+        plan, key, args = self._signature(kind, gk, bb, ascending)
 
         if kind == "sort_kv":
             vshape, vdtype = gk[2], np.dtype(gk[3])
             vbatch = np.zeros((bb, bucket) + vshape, vdtype)
             for row, v in enumerate(vals):
                 vbatch[row, : len(v)] = v
-            key = key + (vshape, vdtype.name)
-            args.append(jax.ShapeDtypeStruct((bb, bucket) + vshape, jnp.dtype(vdtype)))
 
         with self._lock:
             before = self.cache.misses

@@ -79,12 +79,24 @@ class ExchangeTelemetry:
         self._window = window
         self._obs: Dict[str, deque] = {}
         self._lock = threading.Lock()
+        self._subscribers: list = []
         self.calls = 0
         self.overflow_events = 0
         self.total_retries = 0
         self.total_recompiles = 0
         self.total_dropped = 0
         self.total_dropped_averted = 0
+
+    def subscribe(self, fn) -> None:
+        """Register ``fn(key, obs)`` to run after every ``record``.
+
+        Subscribers run outside the ledger lock (they may read the ledger
+        back).  This is how ``AnomalyMonitor.watch_exchange`` folds served
+        MoE drops into the routing-collapse signal without the exchange
+        layer importing the fault-tolerance layer.
+        """
+        with self._lock:
+            self._subscribers.append(fn)
 
     def record(self, key: str, obs: ExchangeObservation) -> None:
         with self._lock:
@@ -95,6 +107,9 @@ class ExchangeTelemetry:
             self.total_recompiles += obs.recompiles
             self.total_dropped += obs.dropped
             self.total_dropped_averted += obs.dropped_averted
+            subscribers = list(self._subscribers)
+        for fn in subscribers:
+            fn(key, obs)
 
     def last(self, key: str) -> Optional[ExchangeObservation]:
         """Most recent observation for ``key`` (None before any call)."""

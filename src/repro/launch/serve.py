@@ -24,11 +24,21 @@ learned factor).  Point ``$REPRO_SORT_PLANS`` at a JSON file and the
 learned capacity survives restarts — the second serve run's first step
 already sizes expert buffers right (docs/exchange.md).
 
+``--tenants web:3:0,batch:1:1`` routes the top-k path through the
+multi-tenant SLO frontend instead (``repro.engine.frontend.SortFrontend``):
+decode rows are assigned round-robin across the named tenants (weight and
+priority per spec), each stamped with the ``--slo-ms`` deadline, and the
+exit line reports per-tenant served counts and SLO misses.  ``--warmup``
+AOT-compiles the vocab-size argsort ladder before traffic so the first
+decode step pays zero fresh compiles (docs/serving.md).
+
 Usage:
   python -m repro.launch.serve --arch qwen3-0.6b --reduced --batch 4 \
       --prompt-len 32 --gen 16 [--topk-queue] [--adaptive] [--stats]
   python -m repro.launch.serve --moe --batch 4 --prompt-len 64 --gen 8 \
       --experts 8 --moe-skew 6.0 --stats
+  python -m repro.launch.serve --reduced --batch 4 --gen 8 \
+      --tenants web:3:0,batch:1:1 --warmup --slo-ms 50 --stats
 """
 from __future__ import annotations
 
@@ -46,18 +56,31 @@ from repro.train.steps import prefill_step, serve_decode_step
 
 
 def sample_next(logits: jax.Array, key, *, temperature: float, top_k: int,
-                queue=None):
+                queue=None, frontend=None, tenants=(), ticket_log=None):
     """(B, V) logits -> (B,) token ids. top_k via the engine's stable argsort
     (same tie behaviour as lax.top_k; the serving-path integration).
 
     With ``queue=`` (an ``AsyncSortService``) each row becomes one
     ``submit_async(kind='argsort', ascending=False)`` request; the queue
     coalesces the B rows into a single executable call per decode step.
+    With ``frontend=`` (a ``SortFrontend``) rows are instead submitted
+    round-robin across ``tenants`` — each row carries its tenant's SLO
+    deadline, and admitted tickets land in ``ticket_log`` so the driver can
+    report per-tenant SLO misses at exit.
     """
-    if queue is not None:
+    if frontend is not None or queue is not None:
         rows = np.asarray(logits, np.float32)
-        futs = [queue.submit_async(r, kind="argsort", ascending=False)
-                for r in rows]
+        if frontend is not None:
+            futs = [
+                frontend.submit(tenants[i % len(tenants)], r,
+                                kind="argsort", ascending=False)
+                for i, r in enumerate(rows)
+            ]
+            if ticket_log is not None:
+                ticket_log.extend(futs)
+        else:
+            futs = [queue.submit_async(r, kind="argsort", ascending=False)
+                    for r in rows]
         order = np.stack([np.asarray(f.result())[:top_k] for f in futs])
         idx = jnp.asarray(order.astype(np.int32))
         if temperature <= 0:
@@ -202,13 +225,45 @@ def main(argv=None):
     ap.add_argument("--moe-skew", type=float, default=6.0,
                     help="router logit bias onto a hot expert subset (0 = "
                          "uniform routing, nothing for the loop to learn)")
+    ap.add_argument("--tenants", default="",
+                    help="serve the top-k path through the multi-tenant "
+                         "SLO frontend (repro.engine.frontend.SortFrontend); "
+                         "comma-separated name[:weight[:priority]] specs, "
+                         "decode rows assigned round-robin (docs/serving.md)")
+    ap.add_argument("--slo-ms", type=float, default=None,
+                    help="per-request deadline budget for --tenants rows; "
+                         "late rows are still answered (serving must emit a "
+                         "token) and counted as SLO misses at exit")
+    ap.add_argument("--warmup", action="store_true",
+                    help="AOT-compile the serving sort cells (vocab-size "
+                         "argsort across the batch ladder) before traffic, "
+                         "so the first decode step pays zero compiles")
     args = ap.parse_args(argv)
 
     if args.moe:
         return run_moe_serving(args)
 
+    frontend = None
+    fe_tenants: list = []
+    fe_tickets: list = []
     qsvc = None
-    if args.topk_queue or args.adaptive or args.stats:
+    if args.tenants:
+        from repro.engine import SortFrontend, Tenant
+        specs = []
+        for spec in args.tenants.split(","):
+            parts = spec.split(":")
+            specs.append(Tenant(
+                parts[0],
+                weight=float(parts[1]) if len(parts) > 1 else 1.0,
+                priority=int(parts[2]) if len(parts) > 2 else 0,
+                slo_ms=args.slo_ms,
+            ))
+        # shed_expired=False: a decode row must produce a token no matter
+        # what, so late rows are served and the miss is counted instead
+        frontend = SortFrontend(tenants=specs, max_batch=args.batch,
+                                shed_expired=False, start=True)
+        fe_tenants = [t.name for t in specs]
+    elif args.topk_queue or args.adaptive or args.stats:
         from repro.engine import AsyncSortService
         qsvc = AsyncSortService(
             max_batch=args.batch,
@@ -219,6 +274,24 @@ def main(argv=None):
     cfg = ARCHS[args.arch]
     if args.reduced:
         cfg = reduced(cfg)
+
+    if args.warmup:
+        # AOT-warm every executable the decode loop's top-k can touch: a
+        # descending float32 argsort of one vocab row, at every pow2 batch
+        # bucket up to --batch (partial flushes produce partial batches)
+        from repro.engine.frontend import warmup as engine_warmup
+        svc = frontend.service if frontend is not None else (
+            qsvc.service if qsvc is not None else None
+        )
+        if svc is None:
+            from repro.engine import AsyncSortService
+            qsvc = AsyncSortService(max_batch=args.batch, max_delay_ms=2.0)
+            svc = qsvc.service
+        rep = engine_warmup(svc, cells=[(cfg.vocab_size, "float32")],
+                            kinds=("argsort",), ascending=(False,),
+                            max_batch=args.batch)
+        print(rep.summary())
+
     ctx = ShardCtx()
     key = jax.random.PRNGKey(args.seed)
     params = model_init(key, cfg, ep_shards=ctx.ep_shards)
@@ -245,14 +318,16 @@ def main(argv=None):
     decode = jax.jit(lambda p, t, c: serve_decode_step(p, cfg, t, c, ctx=ctx))
     out_tokens = []
     tok = sample_next(logits, key, temperature=args.temperature,
-                      top_k=args.top_k, queue=qsvc)
+                      top_k=args.top_k, queue=qsvc, frontend=frontend,
+                      tenants=fe_tenants, ticket_log=fe_tickets)
     out_tokens.append(tok)
     t0 = time.time()
     for i in range(args.gen - 1):
         key, sub = jax.random.split(key)
         lg, cache = decode(params, tok[:, None], cache)
         tok = sample_next(lg[:, 0], sub, temperature=args.temperature,
-                          top_k=args.top_k, queue=qsvc)
+                          top_k=args.top_k, queue=qsvc, frontend=frontend,
+                          tenants=fe_tenants, ticket_log=fe_tickets)
         out_tokens.append(tok)
     jax.block_until_ready(tok)
     t_decode = time.time() - t0
@@ -261,6 +336,22 @@ def main(argv=None):
     print(f"arch={cfg.name} batch={args.batch} prompt={args.prompt_len} gen={args.gen}")
     print(f"prefill {t_prefill*1e3:.1f} ms; decode {t_decode/max(args.gen-1,1)*1e3:.2f} ms/tok")
     print("sampled token ids (first row):", gen[0][:16].tolist())
+    if frontend is not None:
+        frontend.close()
+        st = frontend.stats
+        served = " ".join(f"{k}={v}"
+                          for k, v in sorted(st.tenant_served.items()))
+        misses = sum(1 for t in fe_tickets if not t.slo_met)
+        print(f"frontend: tenants[{served}] batches={st.batches} "
+              f"fill={st.fill_ratio():.2f} compiles={st.compiles} "
+              f"slo_misses={misses}/{len(fe_tickets)} "
+              f"shed={st.shed_total()}")
+        if args.stats:
+            pct = st.latency_percentiles()
+            print(f"frontend-stats: requests={st.requests} "
+                  f"keys_in={st.keys_in} cache_hits={st.cache_hits} "
+                  f"queue p50={pct[50]*1e3:.2f} ms p99={pct[99]*1e3:.2f} ms "
+                  f"throughput={st.throughput_keys_per_s():.0f} keys/s")
     if qsvc is not None:
         qsvc.close()
         qs = qsvc.stats

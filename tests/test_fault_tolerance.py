@@ -82,3 +82,70 @@ def test_recovery_gives_up_after_max_restarts():
             n_steps=3, step_fn=bad_step, save_fn=lambda i: None,
             restore_fn=lambda: 0, max_restarts=2,
         )
+
+
+# --- ExchangeObservation.dropped -> routing-collapse signal (PR 6) ---------
+
+def _obs(dropped=0, averted=0):
+    from repro.exchange.telemetry import ExchangeObservation
+    return ExchangeObservation(m=64, part_buckets=4, capacity=16, peak=20,
+                               overflowed=dropped > 0 or averted > 0,
+                               retries=int(averted > 0), dropped=dropped,
+                               dropped_averted=averted)
+
+
+def test_watch_exchange_folds_served_drops_into_overflow_signal():
+    from repro.exchange.telemetry import ExchangeTelemetry
+
+    led = ExchangeTelemetry()
+    mon = AnomalyMonitor(overflow_patience=3).watch_exchange(led)
+    # clean steps don't advance the streak
+    mon.check({"loss": 1.0})
+    for i in range(2):
+        led.record("moe/E4k1|64|float32|local", _obs(dropped=5))
+        mon.check({"loss": 1.0})
+    assert mon.dropped_total == 10
+    led.record("moe/E4k1|64|float32|local", _obs(dropped=1))
+    with pytest.raises(TrainingAnomaly, match="tokens dropped"):
+        mon.check({"loss": 1.0})
+
+
+def test_watch_exchange_ignores_averted_drops():
+    from repro.exchange.telemetry import ExchangeTelemetry
+
+    led = ExchangeTelemetry()
+    mon = AnomalyMonitor(overflow_patience=1).watch_exchange(led)
+    # the adaptive path retried loss-free: no served-output corruption,
+    # so no anomaly no matter how many times it happens
+    for _ in range(5):
+        led.record("moe/E4k1|64|float32|local", _obs(averted=7))
+        mon.check({"loss": 1.0})
+    assert mon.dropped_total == 0
+
+
+def test_watch_exchange_streak_resets_on_clean_step():
+    from repro.exchange.telemetry import ExchangeTelemetry
+
+    led = ExchangeTelemetry()
+    mon = AnomalyMonitor(overflow_patience=2).watch_exchange(led)
+    led.record("k", _obs(dropped=3))
+    mon.check({"loss": 1.0})       # streak 1
+    mon.check({"loss": 1.0})       # clean -> reset
+    led.record("k", _obs(dropped=3))
+    mon.check({"loss": 1.0})       # streak 1 again, no raise
+    assert mon.dropped_total == 6
+
+
+def test_telemetry_subscribers_see_every_record():
+    from repro.exchange.telemetry import ExchangeTelemetry
+
+    led = ExchangeTelemetry()
+    seen = []
+    led.subscribe(lambda key, obs: seen.append((key, obs.dropped)))
+    led.record("a", _obs(dropped=2))
+    led.record("b", _obs())
+    assert seen == [("a", 2), ("b", 0)]
+    # subscribers run outside the ledger lock: reading back must not deadlock
+    led.subscribe(lambda key, obs: led.last(key))
+    led.record("a", _obs(dropped=1))
+    assert led.total_dropped == 3

@@ -40,6 +40,24 @@ def test_serve_driver_topk_queue_matches_direct_path():
     assert (queued == direct).all()
 
 
+def test_serve_driver_multi_tenant_frontend_matches_direct_path(capsys):
+    """--tenants + --warmup (rows through the SLO SortFrontend) samples the
+    same tokens as the direct path, serves every row (shed_expired=False on
+    the decode path), and pays zero compiles once traffic starts."""
+    args = ["--arch", "qwen3-0.6b", "--reduced", "--batch", "2",
+            "--prompt-len", "12", "--gen", "4"]
+    direct = serve_main(args)
+    capsys.readouterr()
+    fronted = serve_main(args + ["--tenants", "web:3:0,batch:1:1",
+                                 "--warmup", "--slo-ms", "60000", "--stats"])
+    out = capsys.readouterr().out
+    assert (fronted == direct).all()
+    assert "compiled" in out                       # warmup report printed
+    assert "slo_misses=0/8" in out                 # 2 rows x 4 steps, all met
+    assert "web=4" in out and "batch=4" in out     # round-robin row split
+    assert "shed=0" in out
+
+
 def test_collective_parser_on_real_hlo():
     """Loop-aware accounting: a psum inside a scan counts trip_count times."""
     from jax.sharding import PartitionSpec as P

@@ -64,6 +64,10 @@ class AnomalyMonitor:
     _overflow_streak: int = 0
     _pending_dropped: int = 0        # served drops reported since last check()
     _dropped_total: int = 0
+    # exchange observations arrive from whichever thread ran the dispatch
+    # (sync callers, the async queue's dispatcher, concurrent warmups), so
+    # the drop counters must not lose updates to read-modify-write races
+    _drop_lock: threading.Lock = field(default_factory=threading.Lock, repr=False)
 
     def watch_exchange(self, telemetry: Any) -> "AnomalyMonitor":
         """Subscribe to an ``ExchangeTelemetry`` ledger's observation stream.
@@ -82,13 +86,15 @@ class AnomalyMonitor:
     def _on_exchange(self, key: str, obs: Any) -> None:
         dropped = int(getattr(obs, "dropped", 0))
         if dropped > 0:
-            self._pending_dropped += dropped
-            self._dropped_total += dropped
+            with self._drop_lock:
+                self._pending_dropped += dropped
+                self._dropped_total += dropped
 
     @property
     def dropped_total(self) -> int:
         """Lifetime served-output drops seen via ``watch_exchange``."""
-        return self._dropped_total
+        with self._drop_lock:
+            return self._dropped_total
 
     def check(self, metrics: dict) -> None:
         loss = float(metrics.get("loss", 0.0))
@@ -97,7 +103,8 @@ class AnomalyMonitor:
         gn = float(metrics.get("grad_norm", 0.0))
         if gn > self.grad_norm_limit:
             raise TrainingAnomaly(f"grad norm {gn:.3e} above limit")
-        dropped, self._pending_dropped = self._pending_dropped, 0
+        with self._drop_lock:
+            dropped, self._pending_dropped = self._pending_dropped, 0
         if bool(metrics.get("moe_overflow", False)) or dropped > 0:
             self._overflow_streak += 1
             if self._overflow_streak >= self.overflow_patience:

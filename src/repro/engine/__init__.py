@@ -35,6 +35,7 @@ from .planner import (
     autotune,
     default_planner,
     mesh_fingerprint,
+    parse_plan_key,
     plan_from_strategy,
     plan_key,
     run_plan,
@@ -72,6 +73,7 @@ __all__ = [
     "autotune",
     "default_planner",
     "mesh_fingerprint",
+    "parse_plan_key",
     "plan_from_strategy",
     "plan_key",
     "run_plan",

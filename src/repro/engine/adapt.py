@@ -105,6 +105,41 @@ class LearnedCapacity:
             observations=int(d.get("observations", 0)),
         )
 
+    def merge(self, other: "LearnedCapacity") -> "LearnedCapacity":
+        """Combine two entries for the same cell from concurrent writers.
+
+        The **more-informed lineage wins** the factor: lexicographic max on
+        ``(observations, capacity_factor)``.  ``observations`` grows
+        monotonically within one planner's lineage, so a writer always
+        supersedes its *own* earlier persisted state — geometric decay back
+        toward the default survives the merge instead of being pinned by a
+        stale high-water entry.  Between genuinely concurrent writers the
+        one that has seen more traffic wins, and at equal observation counts
+        the higher (more conservative) factor does — under-provisioning is
+        the expensive error.  ``peak_factor`` is a lifetime max by
+        definition, and ``observations`` takes max rather than sum because
+        concurrent counts share lineage through the persisted file — summing
+        would double-count on every merge.  Lexicographic max is
+        commutative, associative, and idempotent, so any interleaving of
+        rank saves converges to the same entry (property-tested in
+        tests/test_plan_cache_concurrency.py).
+
+        >>> LearnedCapacity(3.0, 2.5, 4).merge(LearnedCapacity(2.0, 3.0, 9))
+        LearnedCapacity(capacity_factor=2.0, peak_factor=3.0, observations=9)
+        >>> LearnedCapacity(3.0, 2.5, 9).merge(LearnedCapacity(2.0, 3.0, 9))
+        LearnedCapacity(capacity_factor=3.0, peak_factor=3.0, observations=9)
+        """
+        a, b = (self.observations, self.capacity_factor), (
+            other.observations,
+            other.capacity_factor,
+        )
+        win = self if a >= b else other
+        return LearnedCapacity(
+            capacity_factor=win.capacity_factor,
+            peak_factor=max(self.peak_factor, other.peak_factor),
+            observations=max(self.observations, other.observations),
+        )
+
 
 @dataclass(frozen=True)
 class CapacityLearner:

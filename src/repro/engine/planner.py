@@ -35,8 +35,14 @@ import threading
 import time
 import warnings
 import weakref
+from contextlib import contextmanager
 from dataclasses import asdict, dataclass, replace
 from typing import Dict, Optional
+
+try:  # advisory plan-file locking is POSIX-only; elsewhere merge-on-save
+    import fcntl  # still unions concurrent writers, just without mutual
+except ImportError:  # exclusion of the read-merge-write itself
+    fcntl = None  # type: ignore[assignment]
 
 import jax
 import jax.numpy as jnp
@@ -55,12 +61,41 @@ __all__ = [
     "default_planner",
     "mesh_fingerprint",
     "plan_key",
+    "parse_plan_key",
     "plan_from_strategy",
     "run_plan",
     "autotune",
+    "LEARNED_SCOPES",
     "PALLAS_BLOCK_SWEEP",
     "PALLAS_INTERPRET_MAX",
 ]
+
+# how learned capacity factors are keyed across a multi-process deployment:
+# 'global' shares one entry per cell (every rank reads/merges the same key —
+# the most conservative rank wins), 'per_host' suffixes keys with
+# '@h<process_index>' so hosts with host-local skew learn independently
+LEARNED_SCOPES = ("global", "per_host")
+
+
+@contextmanager
+def _plan_file_lock(path: str):
+    """Advisory ``fcntl`` lock serializing read-merge-write on one plan file.
+
+    Taken on a ``<path>.lock`` sidecar (never the plan file itself: the
+    writer atomically ``os.replace``s the plan file, which would drop any
+    lock held on the replaced inode).  Cooperating writers — other ranks of
+    a ``jax.distributed`` job, other processes sharing ``$REPRO_SORT_PLANS``
+    — block here until the current read-merge-write completes.
+    """
+    if fcntl is None:
+        yield
+        return
+    with open(f"{path}.lock", "w") as lockf:
+        fcntl.flock(lockf, fcntl.LOCK_EX)
+        try:
+            yield
+        finally:
+            fcntl.flock(lockf, fcntl.LOCK_UN)
 
 _PLAN_VERSION = 2
 _LOADABLE_VERSIONS = (1, _PLAN_VERSION)  # v1 = plans only, no learned section
@@ -103,25 +138,62 @@ class SortPlan:
 def mesh_fingerprint(mesh=None) -> str:
     """Stable id for the hardware layout a plan was tuned on.
 
+    Single-process fingerprints are ``local/<platform>`` (no mesh) or
+    ``<platform>/<axis>=<size>,...`` (mesh plans).  Under multi-process
+    ``jax.distributed`` the same device count can describe very different
+    hardware — 4 devices might be one host or four — so the fingerprint
+    appends ``/procs<process_count>x<devices_per_process>``: a plan tuned on
+    a 2-process x 2-device topology never masquerades as a single-host
+    4-device plan (the collectives it was timed over cross real process
+    boundaries).  Single-process fingerprints are unchanged, so existing
+    plan-cache files stay valid.
+
     >>> mesh_fingerprint().split("/")[0]   # no mesh: 'local/<platform>'
     'local'
     """
+    procs = jax.process_count()
+    topo = f"/procs{procs}x{jax.local_device_count()}" if procs > 1 else ""
     if mesh is None:
         dev = jax.devices()[0]
-        return f"local/{dev.platform}"
+        return f"local/{dev.platform}{topo}"
     axes = ",".join(f"{name}={size}" for name, size in mesh.shape.items())
-    return f"{mesh.devices.flat[0].platform}/{axes}"
+    return f"{mesh.devices.flat[0].platform}/{axes}{topo}"
 
 
-def plan_key(n: int, dtype, mesh=None) -> str:
+def plan_key(n: int, dtype, mesh=None, *, fingerprint: Optional[str] = None) -> str:
     """(size-bucket, dtype, mesh fingerprint) -> plan-cache key.
+
+    ``fingerprint=`` substitutes a precomputed mesh fingerprint — how
+    tooling builds keys for a topology the current process is not part of
+    (e.g. a coordinator inspecting a multi-host plan file).
 
     >>> plan_key(3000, jnp.int32) == plan_key(4096, jnp.int32)  # same bucket
     True
     >>> plan_key(4096, jnp.int32) == plan_key(4097, jnp.int32)  # next bucket
     False
+    >>> plan_key(100, jnp.int32, fingerprint="cpu/x=4/procs2x2")
+    '128|int32|cpu/x=4/procs2x2'
     """
-    return f"{next_pow2(n)}|{jnp.dtype(dtype).name}|{mesh_fingerprint(mesh)}"
+    fp = mesh_fingerprint(mesh) if fingerprint is None else fingerprint
+    return f"{next_pow2(n)}|{jnp.dtype(dtype).name}|{fp}"
+
+
+def parse_plan_key(key: str):
+    """Inverse of ``plan_key``: ``(size_bucket, dtype_name, fingerprint)``.
+
+    Round-trips every sort-cell key, including multi-process fingerprints
+    (property-tested in tests/test_plan_cache_concurrency.py).  Non-sort
+    cells (the MoE ``moe/E<e>k<k>|...`` keys) raise ``ValueError`` — they
+    carry extra fields and are parsed by their own consumer.
+
+    >>> parse_plan_key(plan_key(3000, jnp.int32, fingerprint="cpu/x=8"))
+    (4096, 'int32', 'cpu/x=8')
+    """
+    parts = key.split("|")
+    if len(parts) != 3 or not parts[0].isdigit():
+        raise ValueError(f"not a sort plan-cache key: {key!r}")
+    bucket, dtype_name, fp = parts
+    return int(bucket), dtype_name, fp
 
 
 def plan_from_strategy(strategy: str, *, n_threads: int = 8) -> SortPlan:
@@ -247,8 +319,14 @@ class Planner:
     'shared'
     """
 
-    def __init__(self, path: Optional[str] = None):
+    def __init__(
+        self, path: Optional[str] = None, *, learned_scope: Optional[str] = None
+    ):
+        scope = learned_scope or os.environ.get("REPRO_LEARNED_SCOPE", "global")
+        if scope not in LEARNED_SCOPES:
+            raise ValueError(f"learned_scope must be one of {LEARNED_SCOPES}")
         self.path = path
+        self.learned_scope = scope
         self.plans: Dict[str, SortPlan] = {}
         self.telemetry = ExchangeTelemetry()
         self.learner = CapacityLearner()
@@ -261,6 +339,53 @@ class Planner:
             self.load(path)
 
     # ------------------------------------------------------------ storage ---
+    @staticmethod
+    def _parse_doc(doc) -> tuple:
+        """Validate one plan-cache JSON document -> (plans, learned).
+
+        Raises on anything malformed; graceful-degradation policy lives in
+        the callers (``load`` warns and keeps state, ``save`` merges from
+        nothing).
+        """
+        if doc.get("version") not in _LOADABLE_VERSIONS:
+            raise ValueError(f"plan cache version {doc.get('version')!r} unsupported")
+        raw = doc["plans"]
+        if not isinstance(raw, dict):
+            raise ValueError("'plans' must be an object")
+        plans = {}
+        for k, v in raw.items():
+            if not isinstance(v, dict):
+                raise ValueError(f"plan entry {k!r} is not an object")
+            plan = SortPlan.from_dict(v)  # unknown fields: forward-compat
+            if plan.strategy not in _PLAN_STRATEGIES:
+                raise ValueError(
+                    f"plan entry {k!r} has unknown strategy {plan.strategy!r}"
+                )
+            plans[k] = plan
+        raw_learned = doc.get("learned", {})  # absent in v1 files
+        if not isinstance(raw_learned, dict):
+            raise ValueError("'learned' must be an object")
+        learned = {}
+        for k, v in raw_learned.items():
+            if not isinstance(v, dict) or "capacity_factor" not in v:
+                raise ValueError(f"learned entry {k!r} is malformed")
+            learned[k] = LearnedCapacity.from_dict(v)
+        return plans, learned
+
+    @staticmethod
+    def _merge_learned(
+        mine: Dict[str, LearnedCapacity], theirs: Dict[str, LearnedCapacity]
+    ) -> Dict[str, LearnedCapacity]:
+        """Union two learned tables; shared keys merge via
+        ``LearnedCapacity.merge`` (more-informed lineage wins — commutative
+        and idempotent, so any interleaving of concurrent writers converges
+        to the same table)."""
+        out = dict(theirs)
+        for k, entry in mine.items():
+            other = out.get(k)
+            out[k] = entry.merge(other) if other is not None else entry
+        return out
+
     def load(self, path: str, *, strict: bool = False) -> "Planner":
         """Load a plan-cache file; a serving process must never die because a
         tuned-plans file rotted on disk.  Corrupt/truncated JSON, an unknown
@@ -269,35 +394,17 @@ class Planner:
         ``default_plan``), or the last-known-good plans when a live process
         re-loads a file that rotted mid-write.  Pass ``strict=True`` to
         re-raise instead (tooling that writes the file).
+
+        The ``learned`` section **merges** into in-memory state instead of
+        replacing it (field-wise max per shared key): a live rank re-reading
+        a shared ``$REPRO_SORT_PLANS`` file picks up what other ranks
+        learned without discarding its own observations.  The ``plans``
+        table keeps replace semantics — the file is the tuning authority.
         """
         try:
             with open(path) as f:
                 doc = json.load(f)
-            if doc.get("version") not in _LOADABLE_VERSIONS:
-                raise ValueError(
-                    f"plan cache version {doc.get('version')!r} unsupported"
-                )
-            raw = doc["plans"]
-            if not isinstance(raw, dict):
-                raise ValueError("'plans' must be an object")
-            plans = {}
-            for k, v in raw.items():
-                if not isinstance(v, dict):
-                    raise ValueError(f"plan entry {k!r} is not an object")
-                plan = SortPlan.from_dict(v)  # unknown fields: forward-compat
-                if plan.strategy not in _PLAN_STRATEGIES:
-                    raise ValueError(
-                        f"plan entry {k!r} has unknown strategy {plan.strategy!r}"
-                    )
-                plans[k] = plan
-            raw_learned = doc.get("learned", {})  # absent in v1 files
-            if not isinstance(raw_learned, dict):
-                raise ValueError("'learned' must be an object")
-            learned = {}
-            for k, v in raw_learned.items():
-                if not isinstance(v, dict) or "capacity_factor" not in v:
-                    raise ValueError(f"learned entry {k!r} is malformed")
-                learned[k] = LearnedCapacity.from_dict(v)
+            plans, learned = self._parse_doc(doc)
         except Exception as e:
             if strict:
                 raise
@@ -308,30 +415,58 @@ class Planner:
                 stacklevel=2,
             )
             return self
-        self.plans = plans
-        self.learned = learned
+        with self._lock:
+            self.plans = plans
+            self.learned = self._merge_learned(self.learned, learned)
         return self
 
     def save(self, path: Optional[str] = None) -> str:
+        """Persist plans + learned state with concurrent-writer safety.
+
+        The write is a **read-merge-write** under an advisory ``fcntl`` lock
+        (``<path>.lock``): re-read the file, union plan keys this planner
+        does not carry, merge the on-disk ``learned`` section per key
+        (``LearnedCapacity.merge``), then atomically ``os.replace`` the
+        result into place.  Two ranks of a ``jax.distributed`` job learning
+        capacity factors into one ``$REPRO_SORT_PLANS`` file therefore never
+        clobber each other — the surviving file carries both ranks' entries
+        no matter how the saves interleave (tests/test_plan_cache_concurrency
+        in-process, tests/multihost/ across real processes).
+        """
         path = path or self.path
         if path is None:
             raise ValueError("no path given and Planner has no default path")
-        # the whole write happens under the lock: concurrent telemetry-driven
-        # saves share one tmp path, and interleaved writes must never be
-        # os.replace'd into the cache a serving process will load
+        # the whole write happens under the thread lock: concurrent
+        # telemetry-driven saves in this process serialize here, and the
+        # fcntl lock extends the same exclusion across processes
         with self._lock:
-            doc = {
-                "version": _PLAN_VERSION,
-                "plans": {k: p.to_dict() for k, p in sorted(self.plans.items())},
-                "learned": {
-                    k: c.to_dict() for k, c in sorted(self.learned.items())
-                },
-            }
-            tmp = f"{path}.tmp"
             os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
-            with open(tmp, "w") as f:
-                json.dump(doc, f, indent=1)
-            os.replace(tmp, path)
+            with _plan_file_lock(path):
+                disk_plans: Dict[str, SortPlan] = {}
+                disk_learned: Dict[str, LearnedCapacity] = {}
+                if os.path.exists(path):
+                    try:
+                        with open(path) as f:
+                            disk_plans, disk_learned = self._parse_doc(json.load(f))
+                    except Exception:
+                        # a rotted file must not block persisting fresh state;
+                        # there is nothing trustworthy in it to preserve
+                        disk_plans, disk_learned = {}, {}
+                plans = {**disk_plans, **self.plans}  # ours win shared keys
+                learned = self._merge_learned(self.learned, disk_learned)
+                doc = {
+                    "version": _PLAN_VERSION,
+                    "plans": {k: p.to_dict() for k, p in sorted(plans.items())},
+                    "learned": {
+                        k: c.to_dict() for k, c in sorted(learned.items())
+                    },
+                }
+                # per-pid tmp name: a crashed writer's leftover can never be
+                # overwritten mid-rename by another rank on the same host
+                tmp = f"{path}.tmp.{os.getpid()}"
+                with open(tmp, "w") as f:
+                    json.dump(doc, f, indent=1)
+                os.replace(tmp, path)
             self.path = self.path or path
         return path
 
@@ -357,9 +492,12 @@ class Planner:
         [(4096, 'int32')]
         """
         fp = mesh_fingerprint(mesh)
+        my_suffix = f"@h{jax.process_index()}"  # per_host-scoped learned keys
         cells = set()
         for key in list(self.plans) + list(self.learned):
-            parts = key.split("|")
+            if key.endswith(my_suffix):
+                key = key[: -len(my_suffix)]  # this host's cells warm here;
+            parts = key.split("|")  # other hosts' fail the fp match below
             if len(parts) != 3 or not parts[0].isdigit():
                 continue  # MoE dispatch cells and future non-sort keys
             bucket, dtype_name, key_fp = parts
@@ -381,9 +519,27 @@ class Planner:
         return plan
 
     # -------------------------------------------------- capacity learning ---
+    def scoped_key(self, key: str) -> str:
+        """Apply the learned-factor scope policy to a plan-cache key.
+
+        ``global`` scope (default) returns the key unchanged: every rank of
+        a multi-process job reads and merges one shared entry, so the most
+        conservative rank's factor wins — right when skew follows the
+        *data*, which any rank may receive.  ``per_host`` scope suffixes
+        ``@h<process_index>``: each host learns its own factor — right when
+        skew follows the *host* (a shard pinned to hot keys), where one hot
+        host must not inflate every host's slab memory.  Both read and
+        write paths (``capacity_factor_for`` / ``observe_exchange``) apply
+        the same scoping, so a planner always reads what it wrote.
+        """
+        if self.learned_scope == "per_host":
+            return f"{key}@h{jax.process_index()}"
+        return key
+
     def capacity_factor_for(self, key: str, default: float = 2.0) -> float:
         """The learned capacity factor for a plan-cache key (``default``
         until telemetry for that key has taught us otherwise)."""
+        key = self.scoped_key(key)
         with self._lock:
             entry = self.learned.get(key)
         return entry.capacity_factor if entry is not None else default
@@ -401,6 +557,7 @@ class Planner:
         the learned factor moved *materially* (>= ``_SAVE_REL_DELTA`` of the
         default, or landed exactly back on it) — steady state costs zero
         writes, and jittery skew costs only in-memory updates."""
+        key = self.scoped_key(key)
         self.telemetry.record(key, obs)
         with self._lock:
             prev = self.learned.get(key)

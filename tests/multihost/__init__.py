@@ -1,0 +1,3 @@
+# A real package so pytest imports this directory's conftest as
+# ``multihost.conftest`` — a bare conftest.py here would clobber the
+# top-level ``tests/conftest`` module name and break its importers.

@@ -1,0 +1,127 @@
+"""Per-rank entry point for the multihost harness (never imported by pytest).
+
+Runs in a fresh interpreter per rank: pins the CPU platform and device
+count *before* jax initializes, joins the ``jax.distributed`` coordination
+service (gloo CPU collectives), loads the body function by file path, runs
+it with a ``MultihostContext``, and writes one JSON report atomically.  Any
+exception — including a failed distributed init — still produces a report,
+so the coordinator can show *why* a rank failed instead of just that it did.
+"""
+from __future__ import annotations
+
+import argparse
+import importlib.util
+import json
+import os
+import sys
+import time
+import traceback
+
+
+class MultihostContext:
+    """What a body function gets: identity plus the common SPMD plumbing.
+
+    Bodies run once per rank with identical ``args``; jax is imported and
+    (for ``nprocs > 1``) ``jax.distributed`` is already initialized by the
+    time the body runs.
+    """
+
+    def __init__(self, rank: int, nprocs: int, args: dict):
+        self.rank = rank
+        self.nprocs = nprocs
+        self.args = args
+
+    def mesh(self, axis: str = "x"):
+        """1-D mesh over every device in the job (all processes)."""
+        import jax
+
+        return jax.make_mesh((jax.device_count(),), (axis,))
+
+    def global_array(self, host_array, mesh, axis: str = "x"):
+        """Shard a host-replicated array over ``mesh[axis]``.
+
+        Every rank passes the same full value (deterministic from the shared
+        seed in ``args``); each process places only its addressable shards.
+        """
+        import jax
+        import jax.numpy as jnp
+        from jax.sharding import NamedSharding, PartitionSpec
+
+        return jax.device_put(
+            jnp.asarray(host_array), NamedSharding(mesh, PartitionSpec(axis))
+        )
+
+    def allgather(self, x):
+        """Gather a sharded array to a host numpy array on every rank."""
+        import numpy as np
+        from jax.experimental import multihost_utils
+
+        return np.asarray(multihost_utils.process_allgather(x, tiled=True))
+
+
+def load_body(spec: str):
+    """``"<file.py>:<function>"`` -> callable, file relative to this dir.
+
+    Loaded by path (not import) so neither ``tests`` nor ``tests.multihost``
+    needs to be a package.
+    """
+    fname, _, func = spec.partition(":")
+    path = os.path.join(os.path.dirname(os.path.abspath(__file__)), fname)
+    mod_spec = importlib.util.spec_from_file_location("_multihost_bodies", path)
+    mod = importlib.util.module_from_spec(mod_spec)
+    mod_spec.loader.exec_module(mod)
+    return getattr(mod, func)
+
+
+def write_report(path: str, doc: dict) -> None:
+    tmp = f"{path}.tmp"
+    with open(tmp, "w") as f:
+        json.dump(doc, f, indent=1)
+    os.replace(tmp, path)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--spec", required=True)
+    ap.add_argument("--rank", type=int, required=True)
+    ap.add_argument("--nprocs", type=int, required=True)
+    ap.add_argument("--coordinator", required=True)
+    ap.add_argument("--report", required=True)
+    ap.add_argument("--local-devices", type=int, default=1)
+    ap.add_argument("--args-json", default="{}")
+    ns = ap.parse_args()
+
+    # platform + device count are fixed at first jax import; set them first
+    os.environ["JAX_PLATFORMS"] = "cpu"
+    if ns.local_devices > 1:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={ns.local_devices} "
+            + os.environ.get("XLA_FLAGS", "")
+        ).strip()
+
+    t0 = time.monotonic()
+    doc = {"rank": ns.rank, "ok": False, "result": None, "error": None}
+    try:
+        import jax
+
+        if ns.nprocs > 1:
+            jax.config.update("jax_cpu_collectives_implementation", "gloo")
+            jax.distributed.initialize(
+                coordinator_address=ns.coordinator,
+                num_processes=ns.nprocs,
+                process_id=ns.rank,
+            )
+        body = load_body(ns.spec)
+        ctx = MultihostContext(ns.rank, ns.nprocs, json.loads(ns.args_json))
+        doc["result"] = body(ctx)
+        doc["ok"] = True
+    except BaseException as e:  # report even SystemExit-ish failures
+        doc["error"] = repr(e)
+        doc["traceback"] = traceback.format_exc()
+    doc["duration_s"] = round(time.monotonic() - t0, 3)
+    write_report(ns.report, doc)
+    return 0 if doc["ok"] else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

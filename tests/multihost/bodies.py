@@ -1,0 +1,263 @@
+"""Body functions the multihost harness runs inside every rank process.
+
+Each body takes a ``MultihostContext`` (rank, nprocs, args, mesh/array
+helpers) and returns a JSON-serializable report.  Bodies must be
+deterministic functions of ``ctx.args`` — every rank builds the same host
+data from the shared seed, and the same body run on the single-process
+forced mesh (``harness.run_forced_mesh``) must produce the identical
+report, which is exactly what the bit-identity tests assert.
+
+Loaded by file path in ``_worker.py`` — keep this module import-light at
+top level (jax is imported inside bodies, after the worker pinned the
+platform and device count).
+"""
+from __future__ import annotations
+
+import hashlib
+import os
+import time
+
+
+def _sha(arr) -> str:
+    import numpy as np
+
+    return hashlib.sha256(np.ascontiguousarray(arr).tobytes()).hexdigest()
+
+
+# ----------------------------------------------------------- cluster sort ---
+def cluster_sort_body(ctx):
+    """Model-D cluster_sort across the whole job; returns the sorted output.
+
+    Asserts correctness against ``np.sort`` in-process; the coordinator
+    additionally asserts bit-identity across ranks and against the
+    single-process forced-mesh run.
+    """
+    import jax
+    import numpy as np
+
+    from repro.core.cluster_sort import cluster_sort
+    from repro.engine.planner import mesh_fingerprint, parse_plan_key, plan_key
+    import jax.numpy as jnp
+
+    a = ctx.args
+    n, seed, mode = a.get("n", 256), a.get("seed", 0), a.get("mode", "splitters")
+    hi = 1 << 20
+    rng = np.random.default_rng(seed)
+    x_np = rng.integers(0, hi, size=n).astype(np.int32)
+    mesh = ctx.mesh()
+    x = ctx.global_array(x_np, mesh)
+    kwargs = {"mode": mode}
+    if mode == "range":
+        kwargs.update(lo=0, hi=hi)
+    slab, valid = cluster_sort(x, mesh, "x", **kwargs)
+    slab_g = ctx.allgather(slab)
+    valid_g = ctx.allgather(valid).astype(bool)
+    got = slab_g[valid_g]
+    assert np.array_equal(got, np.sort(x_np)), "cluster_sort output wrong"
+
+    # the fingerprint round-trips through plan keys on this topology
+    fp = mesh_fingerprint(mesh)
+    key = plan_key(n, jnp.int32, mesh)
+    bucket, dtype_name, parsed_fp = parse_plan_key(key)
+    assert (dtype_name, parsed_fp) == ("int32", fp) and bucket >= n
+    return {
+        "processes": jax.process_count(),
+        "local_devices": jax.local_device_count(),
+        "devices": jax.device_count(),
+        "mesh_fp": fp,
+        "local_fp": mesh_fingerprint(None),
+        "sorted": got.tolist(),
+    }
+
+
+def cluster_sort_kv_body(ctx):
+    """Stable key-value cluster sort: payloads ride the exchange exactly."""
+    import numpy as np
+
+    from repro.engine.kv import cluster_sort_kv
+
+    a = ctx.args
+    n, seed = a.get("n", 256), a.get("seed", 0)
+    rng = np.random.default_rng(seed)
+    # few distinct keys -> heavy duplicates, so stability does real work
+    k_np = rng.integers(0, 32, size=n).astype(np.int32)
+    idx_np = np.arange(n, dtype=np.int32)
+    w_np = rng.standard_normal(n).astype(np.float32)
+    mesh = ctx.mesh()
+    keys = ctx.global_array(k_np, mesh)
+    values = {
+        "idx": ctx.global_array(idx_np, mesh),
+        "w": ctx.global_array(w_np, mesh),
+    }
+    slab_k, slab_v, valid = cluster_sort_kv(keys, values, mesh, "x")
+    valid_g = ctx.allgather(valid).astype(bool)
+    got_k = ctx.allgather(slab_k)[valid_g]
+    got_idx = ctx.allgather(slab_v["idx"])[valid_g]
+    got_w = ctx.allgather(slab_v["w"])[valid_g]
+
+    order = np.argsort(k_np, kind="stable")
+    assert np.array_equal(got_k, k_np[order]), "keys not sorted"
+    assert np.array_equal(got_idx, order.astype(np.int32)), "not stable"
+    assert np.array_equal(got_w, w_np[order]), "payload misaligned"
+    return {
+        "sorted_keys": got_k.tolist(),
+        "idx": got_idx.tolist(),
+        "w_sha": _sha(got_w),
+    }
+
+
+# -------------------------------------------------------------- wire layer ---
+def exchange_roundtrip_body(ctx):
+    """partition_exchange -> combine_exchange round trip, plain and int8 wire."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    import repro  # noqa: F401  (jax compat shims)
+    from jax.sharding import PartitionSpec as P
+
+    from repro.exchange import combine_exchange, partition_exchange
+
+    a = ctx.args
+    seed, d = a.get("seed", 0), a.get("d", 4)
+    mesh = ctx.mesh()
+    P_ = mesh.shape["x"]
+    m = a.get("m", 32)                      # per-shard elements
+    n = m * P_
+    rng = np.random.default_rng(seed)
+    k_np = rng.integers(0, P_, size=n).astype(np.int32)   # bucket == dest shard
+    v_np = rng.standard_normal((n, d)).astype(np.float32)
+    i_np = np.arange(n, dtype=np.int32)
+
+    keys = ctx.global_array(k_np, mesh)
+    vals = ctx.global_array(v_np, mesh)
+    ids = ctx.global_array(i_np, mesh)
+
+    def roundtrip(compress):
+        def body(k, v, i):
+            ex = partition_exchange(
+                k, {"v": v, "i": i}, k, "x", capacity=m, compress=compress
+            )
+            back = combine_exchange(ex.recv_values, ex, "x")
+            return back["v"], back["i"], ex.overflow
+
+        f = jax.jit(
+            jax.shard_map(
+                body,
+                mesh=mesh,
+                in_specs=(P("x"), P("x"), P("x")),
+                out_specs=(P("x"), P("x"), P()),
+            )
+        )
+        bv, bi, ovf = f(keys, vals, ids)
+        return ctx.allgather(bv), ctx.allgather(bi), bool(np.asarray(ovf))
+
+    bv, bi, ovf = roundtrip(False)
+    assert not ovf
+    assert np.array_equal(bv, v_np), "uncompressed payload must round-trip exactly"
+    assert np.array_equal(bi, i_np)
+
+    qv, qi, qovf = roundtrip(True)                        # the int8 wire
+    assert not qovf
+    assert np.array_equal(qi, i_np), "integer leaves must never be quantized"
+    # int8 + per-row scale: bounded relative error, bit-exact determinism
+    scale = np.maximum(np.abs(v_np).max(axis=-1, keepdims=True) / 127.0, 1e-12)
+    assert np.all(np.abs(qv - v_np) <= 0.5 * scale + 1e-6), "int8 wire error bound"
+    return {"plain_sha": _sha(bv), "int8_sha": _sha(qv), "ids_sha": _sha(qi)}
+
+
+# ---------------------------------------------------------------- MoE layer ---
+def moe_adaptive_body(ctx):
+    """moe_apply_adaptive learning expert capacity into a *shared* plan file.
+
+    Every rank runs the replicated adaptive MoE forward on identical skewed
+    tokens with a planner backed by the same ``plans_path`` — the
+    concurrent-writer scenario the fcntl-locked merge-save exists for.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.engine.planner import Planner
+    from repro.models.moe import (
+        MoEConfig,
+        collapse_router,
+        moe_apply_adaptive,
+        moe_init,
+        moe_plan_key,
+    )
+
+    a = ctx.args
+    planner = Planner(a["plans_path"], learned_scope=a.get("scope", "global"))
+    cfg = MoEConfig(
+        d_model=8, d_ff=16, n_experts=4, top_k=2, capacity_factor=1.0,
+        mlp_gated=False,
+    )
+    p = moe_init(jax.random.PRNGKey(0), cfg, jnp.float32, ep_shards=1)
+    p = collapse_router(p)                    # worst-case routing skew
+    x = jax.random.normal(jax.random.PRNGKey(1), (64, cfg.d_model), jnp.float32)
+    y, aux, counts = moe_apply_adaptive(p, cfg, x, planner=planner)
+    planner.save()
+    key = moe_plan_key(x.shape[0], cfg, x.dtype)
+    factor = planner.capacity_factor_for(key, default=cfg.capacity_factor)
+    assert factor > cfg.capacity_factor, "skew must have raised the factor"
+    return {
+        "y_sha": _sha(y),
+        "counts": [int(c) for c in counts],
+        "plan_key": key,
+        "scoped_key": planner.scoped_key(key),
+        "learned_factor": factor,
+        "learned_keys": sorted(planner.learned),
+    }
+
+
+# ----------------------------------------------------- concurrent learning ---
+def sort_learn_body(ctx):
+    """Skewed model-D sort with the full capacity-learning loop active,
+    persisting into one shared plan-cache file from every rank at once."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.cluster_sort import cluster_sort
+    from repro.engine.planner import Planner, plan_key
+
+    a = ctx.args
+    planner = Planner(a["plans_path"], learned_scope=a.get("scope", "global"))
+    n, seed = a.get("n", 256), a.get("seed", 0)
+    hi = 1 << 20
+    rng = np.random.default_rng(seed)
+    # every key in the bottom 1/64 of the range: range-mode bucket 0 is hot
+    x_np = rng.integers(0, hi // 64, size=n).astype(np.int32)
+    mesh = ctx.mesh()
+    x = ctx.global_array(x_np, mesh)
+    kwargs = planner.cluster_kwargs(n, jnp.int32, mesh)
+    slab, valid = cluster_sort(x, mesh, "x", mode="range", lo=0, hi=hi, **kwargs)
+    got = ctx.allgather(slab)[ctx.allgather(valid).astype(bool)]
+    assert np.array_equal(got, np.sort(x_np))
+    planner.save()
+    key = plan_key(n, jnp.int32, mesh)
+    return {
+        "plan_key": key,
+        "scoped_key": planner.scoped_key(key),
+        "learned_factor": planner.capacity_factor_for(key),
+        "learned_keys": sorted(planner.learned),
+    }
+
+
+# --------------------------------------------------------- failure injection ---
+def crash_body(ctx):
+    """The victim rank dies hard mid-test; survivors sit in a long wait.
+
+    Exercises the harness's crash containment: the coordinator must fail the
+    test promptly (victim rc != 0) and terminate the survivors instead of
+    letting pytest hang.
+    """
+    victim = ctx.args.get("victim", 1)
+    if ctx.rank == victim:
+        os._exit(17)  # no report, no cleanup — as close to a segfault as python gets
+    time.sleep(120)
+    return {"survived": True}
+
+
+def hang_body(ctx):
+    """Every rank wedges; only the run timeout can end this test."""
+    time.sleep(600)
+    return {"finished": True}

@@ -1,0 +1,24 @@
+"""tests/multihost plumbing.
+
+* The directory is not a package; put it on ``sys.path`` so the test
+  modules can ``import harness``.
+* Everything in here is marked ``multihost`` and **skipped unless the run
+  opted in with ``-m multihost``** — each test launches several real
+  ``jax.distributed`` processes, which the fast tier-1 suite must not pay
+  for (and must not be able to destabilize).
+"""
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+
+def pytest_collection_modifyitems(config, items):
+    if "multihost" in (config.getoption("-m") or ""):
+        return
+    skip = pytest.mark.skip(reason="multihost harness tests run with -m multihost")
+    for item in items:
+        if "multihost" in item.keywords:
+            item.add_marker(skip)

@@ -1,0 +1,287 @@
+"""Coordinator for real multi-process ``jax.distributed`` tests.
+
+Every multi-device test elsewhere in this repo runs on a *single-process*
+forced multi-device mesh (``tests/conftest.run_with_devices``), which can
+never exercise cross-process behaviour: real inter-node collectives, per-host
+state, concurrent plan-cache writers.  This harness launches N genuinely
+separate Python processes, each calling ``jax.distributed.initialize``
+against a shared coordinator, runs one *body* function in every process, and
+collects per-rank JSON reports back over files.
+
+Design (modeled on pytest-isolated-style subprocess grouping):
+
+* **Isolation** — the pytest process never initializes ``jax.distributed``
+  (nor multiple devices); every run gets a fresh set of interpreters, so no
+  test can leak distributed state into another.
+* **Crash containment** — a rank that dies (segfault, ``os._exit``, OOM
+  kill) would normally wedge the surviving ranks inside a collective
+  forever.  The coordinator polls; after one rank fails it gives the rest
+  ``GRACE_AFTER_FAILURE_S`` to finish, then terminates them.  A hung run is
+  killed at ``timeout`` seconds.  Either way the *test* fails with per-rank
+  diagnostics — the pytest run itself never hangs.
+* **Reports** — each rank writes ``report-<rank>.json`` atomically
+  (tmp + ``os.replace``); schema in docs/testing.md.  Set
+  ``$REPRO_MULTIHOST_REPORT_DIR`` to keep reports (CI uploads them on
+  failure); otherwise they land in a throwaway tempdir.
+
+The single-process reference path lives here too: ``run_forced_mesh`` runs
+the *same body* in one process with ``--xla_force_host_platform_device_count``
+— the mesh the rest of the test suite uses — so tests can assert the
+multi-process path agrees bit-for-bit with the single-process one.
+"""
+from __future__ import annotations
+
+import json
+import os
+import socket
+import subprocess
+import sys
+import tempfile
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+MULTIHOST_DIR = os.path.dirname(os.path.abspath(__file__))
+REPO = os.path.dirname(os.path.dirname(MULTIHOST_DIR))
+WORKER = os.path.join(MULTIHOST_DIR, "_worker.py")
+
+DEFAULT_TIMEOUT_S = 240.0
+# once one rank has failed, how long the surviving ranks get to exit on
+# their own before the coordinator terminates them (they are usually stuck
+# in a collective whose peer no longer exists)
+GRACE_AFTER_FAILURE_S = 8.0
+_STDIO_TAIL = 4000  # chars of stdout/stderr kept per rank in the report
+
+
+def free_port() -> int:
+    """An OS-assigned free TCP port for the jax.distributed coordinator."""
+    with socket.socket(socket.AF_INET, socket.SOCK_STREAM) as s:
+        s.bind(("127.0.0.1", 0))
+        return s.getsockname()[1]
+
+
+@dataclass
+class RankReport:
+    """One rank's outcome: its JSON report plus process-level diagnostics."""
+
+    rank: int
+    ok: bool
+    result: Any = None
+    error: Optional[str] = None
+    traceback: Optional[str] = None
+    returncode: Optional[int] = None
+    duration_s: Optional[float] = None
+    stdout: str = ""
+    stderr: str = ""
+
+    def summary(self) -> str:
+        status = "ok" if self.ok else f"FAILED (rc={self.returncode})"
+        lines = [f"rank {self.rank}: {status}"]
+        if self.error:
+            lines.append(f"  error: {self.error}")
+        if self.traceback:
+            lines.append("  " + self.traceback.strip().replace("\n", "\n  "))
+        if not self.ok and self.stderr:
+            lines.append("  stderr tail:")
+            lines.append("  " + self.stderr.strip().replace("\n", "\n  "))
+        return "\n".join(lines)
+
+
+@dataclass
+class MultihostRun:
+    """Everything one ``run_multihost`` call produced."""
+
+    nprocs: int
+    reports: List[RankReport] = field(default_factory=list)
+    timed_out: bool = False
+    wall_s: float = 0.0
+    report_dir: str = ""
+
+    @property
+    def ok(self) -> bool:
+        return (
+            not self.timed_out
+            and len(self.reports) == self.nprocs
+            and all(r.ok for r in self.reports)
+        )
+
+    def result(self, rank: int = 0) -> Any:
+        """The body's return value on ``rank`` (requires that rank succeeded)."""
+        report = self.reports[rank]
+        assert report.ok, self.describe()
+        return report.result
+
+    def results(self) -> List[Any]:
+        return [self.result(r) for r in range(self.nprocs)]
+
+    def describe(self) -> str:
+        head = (
+            f"multihost run: nprocs={self.nprocs} ok={self.ok} "
+            f"timed_out={self.timed_out} wall={self.wall_s:.1f}s "
+            f"reports in {self.report_dir}"
+        )
+        return "\n".join([head] + [r.summary() for r in self.reports])
+
+    def require_success(self) -> "MultihostRun":
+        assert self.ok, self.describe()
+        return self
+
+
+def _worker_env(env: Optional[Dict[str, str]], local_devices: int) -> Dict[str, str]:
+    out = dict(os.environ)
+    # the worker owns device-count policy; inherited XLA_FLAGS (e.g. from a
+    # forced-device pytest wrapper) must not leak into rank processes
+    out.pop("XLA_FLAGS", None)
+    out["JAX_PLATFORMS"] = "cpu"
+    out["PYTHONPATH"] = os.path.join(REPO, "src") + (
+        os.pathsep + out["PYTHONPATH"] if out.get("PYTHONPATH") else ""
+    )
+    if env:
+        out.update(env)
+    return out
+
+
+def _read_tail(path: str) -> str:
+    try:
+        with open(path, errors="replace") as f:
+            return f.read()[-_STDIO_TAIL:]
+    except OSError:
+        return ""
+
+
+def _terminate(procs: List[subprocess.Popen]) -> None:
+    for p in procs:
+        if p.poll() is None:
+            p.terminate()
+    deadline = time.monotonic() + 3.0
+    for p in procs:
+        if p.poll() is None:
+            try:
+                p.wait(timeout=max(0.1, deadline - time.monotonic()))
+            except subprocess.TimeoutExpired:
+                p.kill()
+                p.wait()
+
+
+def run_multihost(
+    spec: str,
+    nprocs: int,
+    *,
+    args: Optional[dict] = None,
+    timeout: float = DEFAULT_TIMEOUT_S,
+    local_devices: int = 1,
+    env: Optional[Dict[str, str]] = None,
+) -> MultihostRun:
+    """Run body ``spec`` (``"<file.py>:<function>"``, file relative to this
+    directory) in ``nprocs`` real ``jax.distributed`` processes.
+
+    Each rank sees ``local_devices`` CPU devices (via
+    ``--xla_force_host_platform_device_count``), so the global mesh has
+    ``nprocs * local_devices`` devices — a 2-process x 2-device run models a
+    2-node multi-GPU topology on one machine.  Returns a ``MultihostRun``;
+    call ``require_success()`` for an assert with per-rank diagnostics.
+
+    ``nprocs=1`` skips ``jax.distributed.initialize`` entirely — that is the
+    single-process reference mode ``run_forced_mesh`` wraps.
+    """
+    base = os.environ.get("REPRO_MULTIHOST_REPORT_DIR")
+    if base:
+        os.makedirs(base, exist_ok=True)
+        report_dir = tempfile.mkdtemp(prefix="run-", dir=base)
+    else:
+        report_dir = tempfile.mkdtemp(prefix="repro-multihost-")
+    port = free_port()
+    wenv = _worker_env(env, local_devices)
+
+    procs: List[subprocess.Popen] = []
+    stdio: List[tuple] = []
+    t0 = time.monotonic()
+    for rank in range(nprocs):
+        cmd = [
+            sys.executable,
+            WORKER,
+            "--spec", spec,
+            "--rank", str(rank),
+            "--nprocs", str(nprocs),
+            "--coordinator", f"127.0.0.1:{port}",
+            "--report", os.path.join(report_dir, f"report-{rank}.json"),
+            "--local-devices", str(local_devices),
+        ]
+        if args is not None:
+            cmd += ["--args-json", json.dumps(args)]
+        out_path = os.path.join(report_dir, f"stdout-{rank}.log")
+        err_path = os.path.join(report_dir, f"stderr-{rank}.log")
+        out_f, err_f = open(out_path, "w"), open(err_path, "w")
+        stdio.append((out_path, err_path, out_f, err_f))
+        procs.append(
+            subprocess.Popen(cmd, env=wenv, stdout=out_f, stderr=err_f, cwd=REPO)
+        )
+
+    # --- poll until everyone exits, a failure drains the grace period, or
+    #     the deadline lands; never block pytest indefinitely ---
+    deadline = t0 + timeout
+    first_failure: Optional[float] = None
+    timed_out = False
+    while True:
+        codes = [p.poll() for p in procs]
+        if all(c is not None for c in codes):
+            break
+        now = time.monotonic()
+        if now >= deadline:
+            timed_out = True
+            _terminate(procs)
+            break
+        if first_failure is None and any(c not in (None, 0) for c in codes):
+            first_failure = now
+        if first_failure is not None and now - first_failure > GRACE_AFTER_FAILURE_S:
+            _terminate(procs)
+            break
+        time.sleep(0.05)
+    wall = time.monotonic() - t0
+
+    run = MultihostRun(
+        nprocs=nprocs, timed_out=timed_out, wall_s=wall, report_dir=report_dir
+    )
+    for rank, p in enumerate(procs):
+        out_path, err_path, out_f, err_f = stdio[rank]
+        out_f.close()
+        err_f.close()
+        report = RankReport(
+            rank=rank,
+            ok=False,
+            returncode=p.poll(),
+            stdout=_read_tail(out_path),
+            stderr=_read_tail(err_path),
+        )
+        rpath = os.path.join(report_dir, f"report-{rank}.json")
+        if os.path.exists(rpath):
+            try:
+                with open(rpath) as f:
+                    doc = json.load(f)
+                report.ok = bool(doc.get("ok")) and p.poll() == 0
+                report.result = doc.get("result")
+                report.error = doc.get("error")
+                report.traceback = doc.get("traceback")
+                report.duration_s = doc.get("duration_s")
+            except Exception as e:  # unreadable report = failed rank
+                report.error = f"unreadable report: {e!r}"
+        elif timed_out:
+            report.error = f"no report: run exceeded {timeout:.0f}s timeout"
+        elif p.poll() not in (0, None):
+            report.error = f"process died with rc={p.poll()} before reporting"
+        else:
+            report.error = "process exited without writing a report"
+        run.reports.append(report)
+    return run
+
+
+def run_forced_mesh(
+    spec: str, devices: int, *, args: Optional[dict] = None, timeout: float = DEFAULT_TIMEOUT_S
+) -> MultihostRun:
+    """The single-process reference: same body, one process, ``devices``
+    forced host devices — the mesh every other test in this repo uses.
+    Comparing its report against ``run_multihost``'s proves the real
+    multi-process path computes the identical answer."""
+    return run_multihost(
+        spec, nprocs=1, args=args, timeout=timeout, local_devices=devices
+    )

@@ -1,0 +1,66 @@
+"""The harness's own guarantees: crash containment and timeout enforcement.
+
+A wedged or killed rank must fail *that test* with diagnostics, quickly —
+never hang the pytest run.  These tests inject the failures deliberately
+and time the coordinator's response.
+"""
+import time
+
+import pytest
+
+import harness
+
+pytestmark = pytest.mark.multihost
+
+
+def test_killed_rank_fails_cleanly_within_grace_period():
+    """Rank 1 dies hard (``os._exit(17)``, no report); rank 0 would sleep for
+    two minutes.  The coordinator must fail the run shortly after the grace
+    period and terminate the survivor — not wait out the sleep."""
+    t0 = time.monotonic()
+    run = harness.run_multihost(
+        "bodies.py:crash_body", 2, args={"victim": 1}, timeout=60
+    )
+    elapsed = time.monotonic() - t0
+    assert not run.ok
+    assert not run.timed_out, "a crash is a failure, not a timeout"
+    assert run.reports[1].returncode == 17
+    assert "rc=17" in run.reports[1].error
+    assert run.reports[0].returncode != 0, "survivor must have been terminated"
+    assert elapsed < harness.GRACE_AFTER_FAILURE_S + 30, (
+        f"containment took {elapsed:.0f}s — survivor was not reaped promptly"
+    )
+    # per-rank diagnostics are available for the failure message
+    assert "rank 1: FAILED" in run.describe()
+
+
+def test_hung_run_is_killed_at_timeout():
+    t0 = time.monotonic()
+    run = harness.run_multihost("bodies.py:hang_body", 2, timeout=10)
+    elapsed = time.monotonic() - t0
+    assert not run.ok
+    assert run.timed_out
+    assert elapsed < 40, f"timeout enforcement took {elapsed:.0f}s"
+    assert all(not r.ok for r in run.reports)
+    assert "timeout" in run.reports[0].error
+
+
+def test_failed_rank_report_carries_traceback():
+    """A body that raises produces a per-rank report with the traceback —
+    the coordinator surfaces *why*, not just that a rank failed."""
+    run = harness.run_multihost(
+        "bodies.py:cluster_sort_body", 1, args={"n": 64, "mode": "nonsense"}
+    )
+    assert not run.ok
+    r = run.reports[0]
+    assert r.returncode == 1
+    assert r.error and r.traceback
+    assert "nonsense" in (r.traceback or "") or "nonsense" in (r.error or "")
+
+
+def test_require_success_message_names_the_failing_rank():
+    run = harness.run_multihost(
+        "bodies.py:crash_body", 2, args={"victim": 0}, timeout=60
+    )
+    with pytest.raises(AssertionError, match="rank 0: FAILED"):
+        run.require_success()

@@ -1,0 +1,90 @@
+"""Real multi-process cluster sort: bit-identical to the single-process mesh.
+
+Every other sort test in the repo runs on a forced single-process
+multi-device mesh.  These run the same bodies across genuinely separate
+``jax.distributed`` processes (gloo CPU collectives) and assert the output
+is not just correct but **bit-identical** to the forced-mesh reference —
+the distributed exchange must be a pure re-plumbing of the same math.
+"""
+import pytest
+
+import harness
+
+pytestmark = pytest.mark.multihost
+
+
+def test_cluster_sort_2proc_bit_identical_to_forced():
+    args = {"n": 256, "seed": 3, "mode": "splitters"}
+    multi = harness.run_multihost(
+        "bodies.py:cluster_sort_body", 2, args=args
+    ).require_success()
+    forced = harness.run_forced_mesh(
+        "bodies.py:cluster_sort_body", 2, args=args
+    ).require_success()
+    r0, r1 = multi.results()
+    assert r0["sorted"] == r1["sorted"], "ranks disagree on the sorted output"
+    assert r0["sorted"] == forced.result()["sorted"], (
+        "2-process sort differs from the single-process 2-device reference"
+    )
+    assert r0["processes"] == 2 and r0["devices"] == 2
+
+
+def test_cluster_sort_range_mode_2proc_bit_identical_to_forced():
+    args = {"n": 300, "seed": 11, "mode": "range"}
+    multi = harness.run_multihost(
+        "bodies.py:cluster_sort_body", 2, args=args
+    ).require_success()
+    forced = harness.run_forced_mesh(
+        "bodies.py:cluster_sort_body", 2, args=args
+    ).require_success()
+    assert multi.result()["sorted"] == forced.result()["sorted"]
+
+
+def test_cluster_sort_4proc():
+    args = {"n": 512, "seed": 7, "mode": "splitters"}
+    multi = harness.run_multihost(
+        "bodies.py:cluster_sort_body", 4, args=args
+    ).require_success()
+    results = multi.results()
+    assert all(r["sorted"] == results[0]["sorted"] for r in results)
+    assert results[0]["devices"] == 4
+    forced = harness.run_forced_mesh(
+        "bodies.py:cluster_sort_body", 4, args=args
+    ).require_success()
+    assert results[0]["sorted"] == forced.result()["sorted"]
+
+
+def test_2x2_topology_distinct_fingerprint():
+    """2 processes x 2 devices: same global device count as forced 4-device,
+    but the plan-cache fingerprint must tell the topologies apart."""
+    args = {"n": 256, "seed": 9, "mode": "splitters"}
+    multi = harness.run_multihost(
+        "bodies.py:cluster_sort_body", 2, args=args, local_devices=2
+    ).require_success()
+    forced = harness.run_forced_mesh(
+        "bodies.py:cluster_sort_body", 4, args=args
+    ).require_success()
+    r, f = multi.result(), forced.result()
+    assert r["devices"] == 4 and r["local_devices"] == 2
+    assert r["sorted"] == f["sorted"]
+    assert r["mesh_fp"].endswith("/procs2x2")
+    assert f["mesh_fp"] == "cpu/x=4"
+    assert r["mesh_fp"] != f["mesh_fp"], (
+        "a 2x2 multi-process mesh must not share plan-cache cells with a "
+        "single-process 4-device mesh"
+    )
+    assert r["local_fp"].endswith("/procs2x2")
+
+
+def test_cluster_sort_kv_2proc_bit_identical_to_forced():
+    args = {"n": 200, "seed": 5}
+    multi = harness.run_multihost(
+        "bodies.py:cluster_sort_kv_body", 2, args=args
+    ).require_success()
+    forced = harness.run_forced_mesh(
+        "bodies.py:cluster_sort_kv_body", 2, args=args
+    ).require_success()
+    r, f = multi.result(), forced.result()
+    assert r["sorted_keys"] == f["sorted_keys"]
+    assert r["idx"] == f["idx"], "stability order differs across process counts"
+    assert r["w_sha"] == f["w_sha"], "float payload not bit-identical"

@@ -149,3 +149,62 @@ def test_telemetry_subscribers_see_every_record():
     led.subscribe(lambda key, obs: led.last(key))
     led.record("a", _obs(dropped=1))
     assert led.total_dropped == 3
+
+
+def test_telemetry_and_monitor_survive_concurrent_observers():
+    """Observations arrive from whichever thread ran the dispatch (sync
+    callers, the async queue, concurrent warmups).  Subscriber delivery and
+    the monitor's drop counters must not lose updates under that load."""
+    import threading
+
+    from repro.exchange.telemetry import ExchangeTelemetry
+
+    led = ExchangeTelemetry()
+    mon = AnomalyMonitor(overflow_patience=10**9).watch_exchange(led)
+    seen = []
+    seen_lock = threading.Lock()
+
+    def subscriber(key, obs):
+        with seen_lock:
+            seen.append((key, obs.dropped))
+
+    led.subscribe(subscriber)
+
+    n_threads, per_thread = 8, 50
+    start = threading.Barrier(n_threads)
+
+    def work(t):
+        start.wait()  # maximize interleaving
+        for i in range(per_thread):
+            led.record(f"k{t}", _obs(dropped=1 if i % 2 == 0 else 0))
+
+    threads = [threading.Thread(target=work, args=(t,)) for t in range(n_threads)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+
+    total = n_threads * per_thread
+    drops = n_threads * (per_thread // 2)
+    assert len(seen) == total, "subscriber missed records"
+    assert sum(d for _, d in seen) == drops
+    assert mon.dropped_total == drops, "monitor lost concurrent drop updates"
+    assert led.total_dropped == drops
+    assert led.calls == total
+    for t in range(n_threads):
+        assert led.last(f"k{t}") is not None
+    # one check() drains the whole pending backlog exactly once
+    mon.check({"loss": 1.0})
+    mon.check({"loss": 1.0})
+    assert mon.dropped_total == drops
+
+
+def test_subscribers_added_mid_stream_see_only_later_records():
+    from repro.exchange.telemetry import ExchangeTelemetry
+
+    led = ExchangeTelemetry()
+    led.record("a", _obs(dropped=1))
+    late = []
+    led.subscribe(lambda key, obs: late.append(key))
+    led.record("b", _obs())
+    assert late == ["b"]

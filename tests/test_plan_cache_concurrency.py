@@ -1,0 +1,235 @@
+"""Plan-cache concurrency semantics, in-process.
+
+The multihost suite (tests/multihost/) proves the cross-process story with
+real ``jax.distributed`` ranks; these tests pin the underlying guarantees
+deterministically and cheaply:
+
+* ``Planner.save`` is read-merge-write — two planner instances interleaving
+  saves against one file union their plans and merge their learned entries
+  (the regression for the old silent last-writer-wins clobber).
+* ``plan_key`` / ``parse_plan_key`` round-trip every sort cell, including
+  multi-process topology fingerprints (property-based).
+* ``LearnedCapacity.merge`` is a semilattice join — commutative,
+  associative, idempotent — so any interleaving of rank saves converges.
+* The scope policy (``global`` vs ``per_host``) controls key suffixing.
+"""
+import json
+import os
+import threading
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # bare container: the seeded shim in tests/
+    from _hypothesis_shim import given, settings, strategies as st
+
+from repro.engine.adapt import LearnedCapacity
+from repro.engine.planner import (
+    LEARNED_SCOPES,
+    Planner,
+    SortPlan,
+    parse_plan_key,
+    plan_key,
+)
+
+settings.register_profile("repro-ci", max_examples=25, deadline=None)
+settings.load_profile("repro-ci")
+
+
+# ------------------------------------------------- interleaved-save union ---
+def test_interleaved_planner_saves_union_not_clobber(tmp_path):
+    """Two planner instances over one file, neither aware of the other's
+    state: after both save, the file carries *everything*."""
+    path = str(tmp_path / "plans.json")
+    p1, p2 = Planner(path), Planner(path)  # both loaded the (empty) file
+
+    p1.plans["1024|int32|cpu/x=4"] = SortPlan("cluster", capacity_factor=2.5)
+    p1.learned["1024|int32|cpu/x=4"] = LearnedCapacity(3.0, 2.6, 5)
+    p1.save()
+
+    # p2 still has no idea p1 saved; the old behaviour erased p1's keys here
+    p2.plans["4096|float32|cpu/x=8"] = SortPlan("shared")
+    p2.learned["moe/E8k2|256|float32|local/cpu"] = LearnedCapacity(4.0, 3.5, 2)
+    p2.save()
+
+    fresh = Planner(path)
+    assert set(fresh.plans) == {"1024|int32|cpu/x=4", "4096|float32|cpu/x=8"}
+    assert set(fresh.learned) == {
+        "1024|int32|cpu/x=4",
+        "moe/E8k2|256|float32|local/cpu",
+    }
+    assert fresh.plans["1024|int32|cpu/x=4"].capacity_factor == 2.5
+    assert fresh.learned["1024|int32|cpu/x=4"].observations == 5
+
+
+def test_interleaved_saves_merge_shared_learned_key(tmp_path):
+    """Same learned cell in both writers: the more-informed lineage wins the
+    factor, peak/observations take the max — in either save order."""
+    for flip in (False, True):
+        path = str(tmp_path / f"plans-{flip}.json")
+        p1, p2 = Planner(path), Planner(path)
+        key = "512|int32|cpu/x=2"
+        p1.learned[key] = LearnedCapacity(2.0, 2.1, 9)   # more observations
+        p2.learned[key] = LearnedCapacity(4.0, 4.2, 3)   # higher factor
+        first, second = (p2, p1) if flip else (p1, p2)
+        first.save()
+        second.save()
+        got = Planner(path).learned[key]
+        assert got == LearnedCapacity(2.0, 4.2, 9), f"save order flip={flip}"
+
+
+def test_rotted_file_does_not_block_saving(tmp_path):
+    path = str(tmp_path / "plans.json")
+    with open(path, "w") as f:
+        f.write("{not json")
+    p = Planner()
+    p.learned["128|int32|local/cpu"] = LearnedCapacity(3.0, 3.0, 1)
+    p.save(path)
+    assert set(Planner(path).learned) == {"128|int32|local/cpu"}
+
+
+def test_threaded_saves_keep_every_key(tmp_path):
+    """Many threads, each its own Planner instance, hammering one file: the
+    flock'd read-merge-write must lose nothing."""
+    path = str(tmp_path / "plans.json")
+    n_threads, keys_per_thread = 4, 8
+    errors = []
+
+    def work(t):
+        try:
+            p = Planner(path)
+            for i in range(keys_per_thread):
+                p.learned[f"{2 ** (i + 1)}|int32|cpu/x=2/t{t}"] = LearnedCapacity(
+                    2.0 + t, 2.0 + t, 1
+                )
+                p.save()
+        except Exception as e:  # surface thread failures in the test
+            errors.append(e)
+
+    threads = [threading.Thread(target=work, args=(t,)) for t in range(n_threads)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    assert not errors
+    final = Planner(path)
+    assert len(final.learned) == n_threads * keys_per_thread
+    with open(path) as f:
+        assert json.load(f)["version"] == 2  # file is intact, not torn
+
+
+# ------------------------------------------------------ key round-tripping ---
+_fingerprints = st.sampled_from(
+    [
+        "local/cpu",
+        "local/gpu",
+        "cpu/x=2",
+        "cpu/x=8",
+        "tpu/x=256",
+        "gpu/x=4,y=2",
+        "local/cpu/procs2x1",
+        "cpu/x=4/procs2x2",
+        "cpu/x=8/procs4x2",
+        "gpu/x=64/procs16x4",
+        "tpu/x=256/procs32x8",
+    ]
+)
+_dtypes = st.sampled_from(["int32", "int64", "uint16", "float32", "bfloat16"])
+
+
+@given(st.integers(1, 1 << 22), _dtypes, _fingerprints)
+def test_plan_key_parse_round_trip(n, dtype_name, fp):
+    key = plan_key(n, jnp.dtype(dtype_name), fingerprint=fp)
+    bucket, parsed_dtype, parsed_fp = parse_plan_key(key)
+    assert parsed_dtype == dtype_name
+    assert parsed_fp == fp
+    assert bucket >= n and bucket < 2 * max(n, 1) + 1  # tight pow2 bucket
+    assert bucket & (bucket - 1) == 0
+    # rebuilding from the parse lands on the identical key (stable cells)
+    assert plan_key(bucket, jnp.dtype(parsed_dtype), fingerprint=parsed_fp) == key
+
+
+@pytest.mark.parametrize(
+    "bad",
+    [
+        "",
+        "4096|int32",
+        "4096|int32|cpu/x=2|extra",
+        "moe/E8k2|256|float32|local/cpu",  # MoE cells have their own parser
+        "notanumber|int32|cpu/x=2",
+    ],
+)
+def test_parse_plan_key_rejects_non_sort_cells(bad):
+    with pytest.raises(ValueError):
+        parse_plan_key(bad)
+
+
+# ----------------------------------------------------- merge is a lattice ---
+_entries = st.lists(
+    st.floats(1.0, 64.0), min_size=3, max_size=3
+)  # (cf, peak, raw-obs) triples; obs quantized below
+
+
+def _entry(triple):
+    cf, peak, raw = triple
+    return LearnedCapacity(
+        capacity_factor=round(cf, 2),
+        peak_factor=round(peak, 2),
+        observations=int(raw * 10),
+    )
+
+
+@given(_entries, _entries, _entries)
+def test_learned_capacity_merge_is_semilattice(a, b, c):
+    ea, eb, ec = _entry(a), _entry(b), _entry(c)
+    assert ea.merge(ea) == ea                               # idempotent
+    assert ea.merge(eb) == eb.merge(ea)                     # commutative
+    assert ea.merge(eb).merge(ec) == ea.merge(eb.merge(ec))  # associative
+    merged = ea.merge(eb)
+    assert merged.peak_factor == max(ea.peak_factor, eb.peak_factor)
+    assert merged.observations == max(ea.observations, eb.observations)
+    assert merged.capacity_factor in (ea.capacity_factor, eb.capacity_factor)
+
+
+def test_merge_lets_own_decay_win_over_stale_disk_state():
+    """The reason merge is lexicographic on (observations, factor): a
+    planner's decayed entry must beat its *own* older persisted high-water
+    mark, or decay could never reach the disk."""
+    stale = LearnedCapacity(5.0, 5.0, 4)      # what this planner saved earlier
+    decayed = LearnedCapacity(2.5, 5.0, 9)    # same lineage, more observations
+    assert decayed.merge(stale) == decayed
+    assert stale.merge(decayed) == decayed
+
+
+# ------------------------------------------------------------ scope policy ---
+def test_scope_policy_controls_key_suffix(monkeypatch):
+    key = "4096|int32|cpu/x=2"
+    assert Planner().scoped_key(key) == key  # global default
+    per_host = Planner(learned_scope="per_host")
+    assert per_host.scoped_key(key) == key + "@h0"  # single process: index 0
+    monkeypatch.setenv("REPRO_LEARNED_SCOPE", "per_host")
+    assert Planner().learned_scope == "per_host"
+    with pytest.raises(ValueError):
+        Planner(learned_scope="per_rank")
+    assert set(LEARNED_SCOPES) == {"global", "per_host"}
+
+
+def test_per_host_scope_reads_what_it_wrote(tmp_path):
+    from repro.exchange import ExchangeObservation
+
+    path = str(tmp_path / "plans.json")
+    p = Planner(path, learned_scope="per_host")
+    key = plan_key(4096, jnp.int32)
+    p.observe_exchange(
+        key,
+        ExchangeObservation(
+            m=128, part_buckets=8, capacity=32, peak=48, overflowed=True, retries=1
+        ),
+    )
+    assert p.capacity_factor_for(key) > 2.0  # read path applies the same scope
+    assert set(p.learned) == {key + "@h0"}
+    # and the scoped cell still warms on this host
+    assert p.warmup_cells() == [(4096, "int32")]

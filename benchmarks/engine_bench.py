@@ -19,6 +19,12 @@ hybrid wins small sizes, the cluster MSD-radix model wins large ones — where
 the crossover sits depends on the machine, which is exactly why it's
 measured, not hard-coded.
 
+The ``skew`` section sweeps adversarial key distributions (all-equal,
+Zipfian, one-hot, clustered) across the two partition families: radix rows
+pay overflow retries with peak/mean bucket ratios far above 2, sample rows
+hold ratio ~1 with zero retries at the same capacity — the skew story
+tests/test_skew.py asserts, with wall-clock attached.
+
 The ``frontend`` section benches the multi-tenant SLO front door
 (``repro.engine.frontend``): warm-vs-cold wall-clock replay (what AOT
 ``warmup`` buys on first-request latency and SLO goodput) and two
@@ -265,6 +271,58 @@ def frontend_rows(rng, *, reps: int, smoke: bool):
     return rows
 
 
+def skew_rows(rng, mesh, *, reps: int, smoke: bool):
+    """Adversarial skew sweep: radix vs sample partition, head to head.
+
+    Each row times model-D ``cluster_sort`` at a fixed ``capacity_factor=2.0``
+    on one skewed distribution; the derived column reports the overflow
+    retries that partition paid and the peak/mean bucket ratio it produced.
+    Reading the pairs: radix rows pay retries and ratios way above 2 on every
+    skewed distribution, sample rows hold ratio ~1 with zero retries at the
+    same capacity — the balance-vs-simplicity tradeoff docs/exchange.md
+    derives, measured (the ``uniform`` pair is the radix-friendly baseline
+    showing what sample mode's sampling costs when skew is absent).
+    """
+    from repro.core.cluster_sort import cluster_sort
+
+    n = 1 << 12 if smoke else 1 << 16
+    dists = {
+        "uniform": rng.integers(0, 1 << 20, n),       # radix's home turf
+        "all_equal": np.full(n, 7),
+        "zipf": np.minimum(rng.zipf(1.5, n), 1 << 30),
+        "one_hot": np.where(rng.random(n) < 0.95, 1000,
+                            rng.integers(0, 8000, n)),
+        "clustered": (rng.choice(np.array([0, 3000, 6000]), n)
+                      + rng.integers(0, 100, n)),
+    }
+    rows = []
+    for dist, keys in dists.items():
+        x = jnp.asarray(keys.astype(np.int32))
+        for mode in ("radix", "sample"):
+            telem = []
+
+            def run():
+                return cluster_sort(
+                    x, mesh, "x", mode=mode, capacity_factor=2.0,
+                    telemetry=lambda **kw: telem.append(kw),
+                )
+
+            jax.block_until_ready(run())   # warmup: compiles + any retries
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                out = run()
+            jax.block_until_ready(out)
+            us = (time.perf_counter() - t0) / reps * 1e6
+            last = telem[-1]
+            ratio = last["peak"] * last["part_buckets"] / max(last["m"], 1)
+            rows.append((
+                f"engine/skew_{mode}/dist={dist}/n={n}",
+                us,
+                f"retries={last['retries']};peak_ratio={ratio:.2f}",
+            ))
+    return rows
+
+
 def parse_derived(derived: str) -> dict:
     """``k=v;k=v`` derived column -> dict (floats where they parse)."""
     out = {}
@@ -342,7 +400,7 @@ def main(argv=None):
     ap.add_argument("--sizes", default="", help="comma-separated overrides")
     ap.add_argument("--reps", type=int, default=0, help="0 = auto")
     ap.add_argument("--plans", default="", help="persist tuned plans to this JSON")
-    ap.add_argument("--sections", default="crossover,serving,moe,frontend",
+    ap.add_argument("--sections", default="crossover,serving,moe,frontend,skew",
                     help="comma-separated row groups to run")
     ap.add_argument("--snapshot", default="",
                     help="write rows to this BENCH_*.json")
@@ -419,6 +477,8 @@ def main(argv=None):
         rows += moe_rows(rng, reps=reps, smoke=args.smoke)
     if "frontend" in sections:
         rows += frontend_rows(rng, reps=max(reps, 2), smoke=args.smoke)
+    if "skew" in sections:
+        rows += skew_rows(rng, mesh, reps=max(reps, 2), smoke=args.smoke)
 
     if args.plans:
         planner.save()

@@ -98,9 +98,16 @@ def sort(
         # explicit capacity_factor=, telemetry=, or plan= opts out of the
         # WHOLE loop — a pinned experiment must neither read nor mutate the
         # process-wide learned state
+        # mode=kwargs.get("mode") is the hint that keeps an explicit caller
+        # mode authoritative; with no explicit mode, a skew-promoted cell
+        # comes back with "mode": "sample" injected alongside the kwargs
         kwargs.update(
             default_planner().cluster_kwargs(
-                x.shape[-1], x.dtype, mesh, default=plan.capacity_factor
+                x.shape[-1],
+                x.dtype,
+                mesh,
+                default=plan.capacity_factor,
+                mode=kwargs.get("mode"),
             )
         )
     return run_plan(plan, x, mesh=mesh, axis=axis, ascending=ascending, **kwargs)

@@ -29,6 +29,7 @@ from repro.exchange import (  # noqa: F401  (re-exported for back-compat)
     ExchangeResult,
     combine_exchange,
     partition_exchange,
+    partition_of,
     run_with_capacity_retries,
     slab_geometry,
     slab_valid,
@@ -133,10 +134,11 @@ def cluster_sort(
     ``telemetry`` is an optional callback invoked once per call (including a
     failing one) with keyword args ``m``, ``part_buckets``, ``capacity``
     (final attempt), ``peak`` (max per-(sender, bucket) count observed),
-    ``overflowed``, ``retries``, and ``recompiles`` (fresh executables the
+    ``overflowed``, ``retries``, ``recompiles`` (fresh executables the
     capacity-doubling retries forced — a first-call warmup compile doesn't
-    count) — the feedback ``repro.engine.adapt`` turns into learned
-    capacity factors.
+    count), and ``partition`` (the mode's family, ``"radix"``/``"sample"``)
+    — the feedback ``repro.engine.adapt`` turns into learned capacity
+    factors and, for persistently skewed radix keys, sample-mode promotion.
     """
     P_ = mesh.shape[axis]
     n = x.shape[-1]
@@ -158,5 +160,6 @@ def cluster_sort(
         telemetry=telemetry,
         lru=_compiled_cluster_sort,
         label="cluster_sort",
+        partition=partition_of(mode),
     )
     return slab, slab_valid(slab.shape[0], counts, P_)

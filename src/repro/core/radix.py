@@ -8,12 +8,23 @@ so no inter-node merge is ever needed. Generalizations here:
   decimal key; 10 buckets, nodes limited to 1..10 (kept for fidelity tests).
 * ``range`` mode — binary generalization: bucket = top log2(B) bits of the key's
   offset in a static [lo, hi) range; any power-of-two bucket count.
+* ``radix`` mode (beyond paper) — ``range`` without the static hints: the
+  [lo, hi] endpoints are computed collectively per call
+  (``repro.exchange.partition.radix_bucket_ids``), so the mode works on data
+  whose range nobody declared and the autotuner can sweep it.
 * ``splitters`` mode (beyond paper) — sample-based quantile splitters make the
   buckets balanced under arbitrary key skew (samplesort). The paper's static
   MSD map degrades when keys are non-uniform; DESIGN.md §2.
+* ``sample`` mode (beyond paper) — ``splitters`` upgraded to composite
+  ``(key, id)`` splitters (``sample_partition_ids``): bucket boundaries can
+  land *inside* tie runs, so even all-equal / duplicate-heavy distributions
+  balance. ``stable=True`` keeps the kv paths' stable-sort guarantee.
 
-All functions are shard_map-friendly (pure jnp on local shards; the sampling
-helper uses collectives given an axis name).
+The splitter/radix machinery itself lives in ``repro.exchange.partition``
+(the exchange layer's partition policy); ``splitter_bucket`` and
+``choose_splitters`` are re-exported here for back-compat. All functions are
+shard_map-friendly (pure jnp on local shards; the sampling helpers use
+collectives given an axis name).
 """
 from __future__ import annotations
 
@@ -21,6 +32,14 @@ from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
+
+from repro.exchange.partition import (  # noqa: F401  (re-exported back-compat)
+    DEFAULT_OVERSAMPLE,
+    choose_splitters,
+    radix_bucket_ids,
+    sample_partition_ids,
+    splitter_bucket,
+)
 
 __all__ = [
     "decimal_msd_bucket",
@@ -44,37 +63,6 @@ def range_bucket(keys: jax.Array, *, n_buckets: int, lo, hi) -> jax.Array:
     return jnp.clip(b.astype(jnp.int32), 0, n_buckets - 1)
 
 
-def splitter_bucket(keys: jax.Array, splitters: jax.Array) -> jax.Array:
-    """bucket = rank of key among B-1 sorted splitters (balanced partition)."""
-    return jnp.searchsorted(splitters, keys, side="right").astype(jnp.int32)
-
-
-def choose_splitters(
-    local_keys: jax.Array,
-    n_buckets: int,
-    axis_name: str,
-    *,
-    oversample: int = 8,
-) -> jax.Array:
-    """Distributed quantile-splitter selection (samplesort), inside shard_map.
-
-    Every device contributes ``oversample * n_buckets`` strided samples of its
-    *sorted* shard; the all-gathered sample is sorted and B-1 quantiles become
-    the splitters. One small all_gather — negligible next to the data exchange.
-    """
-    m = local_keys.shape[-1]
-    s = min(m, oversample * n_buckets)
-    stride = max(1, m // s)
-    local_sorted = jnp.sort(local_keys, axis=-1)
-    sample = local_sorted[..., ::stride][..., :s]
-    gathered = jax.lax.all_gather(sample, axis_name)  # (P, s)
-    flat = jnp.sort(gathered.reshape(-1))
-    total = flat.shape[0]
-    # B-1 interior quantiles
-    q = (jnp.arange(1, n_buckets) * total) // n_buckets
-    return flat[q]
-
-
 def make_partitioner(
     mode: str,
     *,
@@ -84,14 +72,24 @@ def make_partitioner(
     hi=1,
     axis_name: Optional[str] = None,
     oversample: int = 8,
+    stable: bool = False,
 ) -> Callable[[jax.Array], jax.Array]:
-    """Return keys -> bucket_ids for the chosen MSD mode."""
+    """Return keys -> bucket_ids for the chosen MSD mode.
+
+    ``stable`` only affects ``sample`` mode: it selects arrival-order tie ids
+    so a stable kv sort stays stable with bucket boundaries inside tie runs
+    (keys-only sorts keep the default interleaved ids, which balance better).
+    """
     if mode == "decimal":
         if n_buckets != 10:
             raise ValueError("decimal MSD implies exactly 10 buckets (paper §3.4)")
         return lambda k: decimal_msd_bucket(k, digits=digits)
     if mode == "range":
         return lambda k: range_bucket(k, n_buckets=n_buckets, lo=lo, hi=hi)
+    if mode == "radix":
+        if axis_name is None:
+            raise ValueError("radix mode needs the mesh axis name")
+        return lambda k: radix_bucket_ids(k, n_buckets, axis_name)
     if mode == "splitters":
         if axis_name is None:
             raise ValueError("splitters mode needs the mesh axis name")
@@ -101,4 +99,13 @@ def make_partitioner(
             return splitter_bucket(k, spl)
 
         return part
+    if mode == "sample":
+        if axis_name is None:
+            raise ValueError("sample mode needs the mesh axis name")
+        # choose_splitters keeps its historic default; the composite sample
+        # partition wants the larger DEFAULT_OVERSAMPLE unless overridden
+        os_ = max(oversample, DEFAULT_OVERSAMPLE)
+        return lambda k: sample_partition_ids(
+            k, n_buckets, axis_name, oversample=os_, stable=stable
+        )
     raise ValueError(f"unknown partitioner mode {mode!r}")

@@ -35,7 +35,7 @@ import threading
 import time
 from collections import deque
 from dataclasses import asdict, dataclass
-from typing import Callable
+from typing import Callable, Optional
 
 from repro.exchange import ExchangeObservation, ExchangeTelemetry  # noqa: F401
 # ^ the observation schema + ledger live in the unified exchange layer now
@@ -93,6 +93,11 @@ class LearnedCapacity:
     capacity_factor: float   # the factor the planner now hands out
     peak_factor: float       # largest required_factor ever observed (audit)
     observations: int        # how many calls fed this cell
+    partition: Optional[str] = None  # promoted partition family ("sample"
+    #                                  once skew promotion latches; None =
+    #                                  follow the plan's own mode)
+    skew_strikes: int = 0    # consecutive high-skew radix observations —
+    #                          the promotion counter (resets on a calm call)
 
     def to_dict(self) -> dict:
         return asdict(self)
@@ -103,6 +108,8 @@ class LearnedCapacity:
             capacity_factor=float(d["capacity_factor"]),
             peak_factor=float(d.get("peak_factor", 0.0)),
             observations=int(d.get("observations", 0)),
+            partition=d.get("partition"),
+            skew_strikes=int(d.get("skew_strikes", 0)),
         )
 
     def merge(self, other: "LearnedCapacity") -> "LearnedCapacity":
@@ -119,25 +126,39 @@ class LearnedCapacity:
         the expensive error.  ``peak_factor`` is a lifetime max by
         definition, and ``observations`` takes max rather than sum because
         concurrent counts share lineage through the persisted file — summing
-        would double-count on every merge.  Lexicographic max is
-        commutative, associative, and idempotent, so any interleaving of
-        rank saves converges to the same entry (property-tested in
-        tests/test_plan_cache_concurrency.py).
+        would double-count on every merge.  ``partition`` is a monotone
+        latch (``None < "radix" < "sample"``): once any writer promoted the
+        cell to the sample partition, the merge keeps it promoted — a
+        concurrent writer that hasn't seen the skew yet can't demote it.
+        ``skew_strikes`` takes max for the same shared-lineage reason as
+        ``observations``.  All components are commutative, associative, and
+        idempotent, so any interleaving of rank saves converges to the same
+        entry (property-tested in tests/test_plan_cache_concurrency.py).
 
         >>> LearnedCapacity(3.0, 2.5, 4).merge(LearnedCapacity(2.0, 3.0, 9))
-        LearnedCapacity(capacity_factor=2.0, peak_factor=3.0, observations=9)
-        >>> LearnedCapacity(3.0, 2.5, 9).merge(LearnedCapacity(2.0, 3.0, 9))
-        LearnedCapacity(capacity_factor=3.0, peak_factor=3.0, observations=9)
+        ... # doctest: +NORMALIZE_WHITESPACE
+        LearnedCapacity(capacity_factor=2.0, peak_factor=3.0, observations=9,
+                        partition=None, skew_strikes=0)
+        >>> e = LearnedCapacity(3.0, 2.5, 9).merge(LearnedCapacity(2.0, 3.0, 9))
+        >>> e.capacity_factor                    # tie on observations: higher
+        3.0
+        >>> LearnedCapacity(2.0, 2.0, 1, partition="sample").merge(
+        ...     LearnedCapacity(9.0, 9.0, 9)).partition   # promotion latches
+        'sample'
         """
         a, b = (self.observations, self.capacity_factor), (
             other.observations,
             other.capacity_factor,
         )
         win = self if a >= b else other
+        rank = {None: 0, "radix": 1, "sample": 2}
+        part = max(self.partition, other.partition, key=lambda p: rank.get(p, 0))
         return LearnedCapacity(
             capacity_factor=win.capacity_factor,
             peak_factor=max(self.peak_factor, other.peak_factor),
             observations=max(self.observations, other.observations),
+            partition=part,
+            skew_strikes=max(self.skew_strikes, other.skew_strikes),
         )
 
 
@@ -168,12 +189,34 @@ class CapacityLearner:
     ...                            peak=16, overflowed=False, retries=0)
     >>> lrn.update(cf, calm, default=2.0)        # halfway back toward 2.0
     2.875
+
+    **Skew promotion** (radix -> sample partition).  Headroom absorbs skew
+    but never removes it: a persistently skewed key distribution keeps a
+    radix-partitioned cell's capacity factor pinned high forever.  The
+    learner therefore also counts *consecutive* radix observations whose
+    peak/mean bucket ratio exceeds ``promote_ratio``; at ``promote_after``
+    strikes the planner latches the cell's learned ``partition`` to
+    ``"sample"`` — subsequent calls partition by balanced composite
+    splitters, the ratio drops to ~1, and the capacity factor decays back
+    toward the default.  Sample-partition (and untagged, e.g. MoE)
+    observations never accrue strikes; one calm radix call resets them.
+
+    >>> skewed = ExchangeObservation(m=128, part_buckets=8, capacity=64,
+    ...     peak=64, overflowed=True, retries=1, partition="radix")
+    >>> s = lrn.promotion_strikes(0, skewed); s      # ratio 4.0 > 2.0
+    1
+    >>> lrn.should_promote(lrn.promotion_strikes(2, skewed))
+    True
+    >>> lrn.promotion_strikes(2, calm)               # untagged: unchanged
+    2
     """
 
     margin: float = 1.25
     decay: float = 0.5
     max_factor: float = 64.0
     snap_eps: float = 1e-3
+    promote_ratio: float = 2.0
+    promote_after: int = 3
 
     def target(self, obs: ExchangeObservation, *, default: float) -> float:
         """observed requirement x margin, clamped to [default, max_factor]."""
@@ -194,6 +237,26 @@ class CapacityLearner:
         if t <= default and decayed - default < self.snap_eps:
             return default
         return decayed
+
+    def promotion_strikes(self, strikes: int, obs: ExchangeObservation) -> int:
+        """Fold one observation into the skew-strike counter.
+
+        Only ``partition="radix"`` observations participate: a high-ratio
+        one adds a strike, a calm one resets to zero (the skew must be
+        *persistent* to promote).  Sample-partition and untagged
+        observations pass the counter through unchanged — promotion is a
+        judgement about radix behaviour, and e.g. MoE routing skew must not
+        flip a sort cell's partition.
+        """
+        if obs.partition != "radix":
+            return strikes
+        if obs.peak_mean_ratio() > self.promote_ratio:
+            return strikes + 1
+        return 0
+
+    def should_promote(self, strikes: int) -> bool:
+        """True once the strike counter reaches ``promote_after``."""
+        return strikes >= self.promote_after
 
 
 class DelayController:

@@ -23,6 +23,7 @@ from jax.sharding import PartitionSpec as P
 from repro.core.radix import make_partitioner
 from repro.exchange import (
     partition_exchange,
+    partition_of,
     run_with_capacity_retries,
     slab_geometry,
     slab_valid,
@@ -128,8 +129,12 @@ def _compiled_cluster_kv(
 ):
     """One jitted shard_map per static config (jit still specializes per
     values-pytree structure internally) — repeat traffic never re-traces."""
+    # stable=True: the kv contract is a *stable* sort, so sample mode must use
+    # arrival-order tie ids (bucket boundaries inside tie runs keep arrival
+    # order across buckets; the slab layout keeps it within buckets)
     part = make_partitioner(
-        mode, n_buckets=part_buckets, digits=digits, lo=lo, hi=hi, axis_name=axis
+        mode, n_buckets=part_buckets, digits=digits, lo=lo, hi=hi, axis_name=axis,
+        stable=True,
     )
     body = partial(
         cluster_kv_local,
@@ -201,6 +206,7 @@ def cluster_sort_kv(
         telemetry=telemetry,
         lru=_compiled_cluster_kv,
         label="cluster_sort_kv",
+        partition=partition_of(mode),
     )
     return slab_k, slab_v, slab_valid(slab_k.shape[0], counts, P_)
 
@@ -245,9 +251,13 @@ def sort_kv(
     if not ascending:
         # sort the order-reversed keys ascending so ties keep arrival order
         # (a flip of the ascending result would reverse them); decimal/range
-        # bucketing assumes the untransformed key space.
-        if cluster_kw.get("mode", "splitters") != "splitters":
-            raise ValueError("descending distributed sort_kv needs mode='splitters'")
+        # bucketing assumes the untransformed key space, the data-adaptive
+        # modes (splitters/sample/auto-ranged radix) don't care.
+        if cluster_kw.get("mode", "splitters") not in ("splitters", "sample", "radix"):
+            raise ValueError(
+                "descending distributed sort_kv needs a data-adaptive mode "
+                "('splitters', 'sample', or 'radix')"
+            )
         k, v = sort_kv(
             _rev_key(keys), values, mesh=mesh, axis=axis, ascending=True,
             compress=compress, **cluster_kw,
@@ -259,7 +269,9 @@ def sort_kv(
         from .planner import default_planner
 
         cluster_kw.update(
-            default_planner().cluster_kwargs(keys.shape[-1], keys.dtype, mesh)
+            default_planner().cluster_kwargs(
+                keys.shape[-1], keys.dtype, mesh, mode=cluster_kw.get("mode")
+            )
         )
     slab_k, slab_v, valid = cluster_sort_kv(
         keys, values, mesh, axis, compress=compress, **cluster_kw

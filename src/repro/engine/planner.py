@@ -11,20 +11,28 @@ processes start with tuned choices.
 
 Plan-cache file format (versioned, human-editable)::
 
-    {"version": 2,
-     "plans": {"<size_bucket>|<dtype>|<mesh_fp>": {"strategy": "shared", ...}},
+    {"version": 3,
+     "plans": {"<size_bucket>|<dtype>|<mesh_fp>": {"strategy": "shared",
+                                                   "partition": null, ...}},
      "learned": {"<size_bucket>|<dtype>|<mesh_fp>": {"capacity_factor": 3.75,
                                                      "peak_factor": 3.0,
-                                                     "observations": 7}}}
+                                                     "observations": 7,
+                                                     "partition": null,
+                                                     "skew_strikes": 0}}}
 
 The ``learned`` section (schema v2) is the capacity-learning feedback loop's
 persistent state: per-cell capacity factors distilled from observed exchange
 telemetry (repro.engine.adapt), so a restarted serving process sizes model-D
-slabs right on its first compile.  Version-1 files load fine — they simply
-carry no learned state.  Cells are keyed by any string the reporting path
-binds: sort cells use ``<size_bucket>|<dtype>|<mesh_fp>`` (``plan_key``),
-MoE dispatch cells use ``moe/E<experts>k<top_k>|<token_bucket>|<dtype>|
-<mesh_fp>`` (``models.moe.moe_plan_key``) — one learned table serves every
+slabs right on its first compile.  Schema v3 adds the partition policy:
+``SortPlan.partition`` pins a plan's partition family, and the learned
+entries carry the skew-promotion latch (``partition``/``skew_strikes``) the
+``CapacityLearner`` flips when a radix-partitioned cell's peak/mean bucket
+ratio stays high — see docs/plan-cache.md.  Version-1 and -2 files load
+fine — they simply carry no learned state / no partition policy.  Cells are
+keyed by any string the reporting path binds: sort cells use
+``<size_bucket>|<dtype>|<mesh_fp>`` (``plan_key``), MoE dispatch cells use
+``moe/E<experts>k<top_k>|<token_bucket>|<dtype>|<mesh_fp>``
+(``models.moe.moe_plan_key``) — one learned table serves every
 ``repro.exchange`` consumer.
 """
 from __future__ import annotations
@@ -52,6 +60,7 @@ from repro.core.cluster_sort import cluster_sort
 from repro.core.distributed_sort import distributed_merge_sort
 from repro.core.seqsort import LOCAL_SORTS
 from repro.core.shared_sort import shared_memory_sort
+from repro.exchange import PARTITION_MODES, partition_of
 
 from .adapt import CapacityLearner, ExchangeObservation, ExchangeTelemetry, LearnedCapacity
 
@@ -97,8 +106,16 @@ def _plan_file_lock(path: str):
         finally:
             fcntl.flock(lockf, fcntl.LOCK_UN)
 
-_PLAN_VERSION = 2
-_LOADABLE_VERSIONS = (1, _PLAN_VERSION)  # v1 = plans only, no learned section
+_PLAN_VERSION = 3
+# v1 = plans only, no learned section; v2 = learned capacity factors but no
+# partition policy (plans/entries load with partition=None, strikes=0)
+_LOADABLE_VERSIONS = (1, 2, _PLAN_VERSION)
+
+# the learner floor handed to *promoted* (sample-partition) cells: the
+# balanced partition needs almost no headroom, so the capacity factor a
+# skewed radix history inflated decays back toward ~1 instead of toward the
+# radix-era default
+SAMPLE_DEFAULT_FACTOR = 1.25
 
 # strategy names: 'shared' covers paper models A/B (A = local_impl='merge',
 # B = local_impl='xla'/'bitonic'); C and D keep their api.py names.
@@ -113,9 +130,20 @@ class SortPlan:
     for ``local_impl='pallas'`` and rides through the JSON plan cache so a
     plan tuned on a TPU ships with its winning tile size.
 
+    ``partition`` (schema v3) pins the cluster partition *family* —
+    ``"radix"`` (digit/range bucketing: fast, skew-fragile) or ``"sample"``
+    (splitter bucketing: balanced under any distribution).  ``None`` means
+    "whatever family ``mode`` itself belongs to"; a non-None value that
+    disagrees with ``mode`` overrides it (that is how skew promotion flips a
+    radix plan to sample mode without forgetting the tuned mode).
+
     >>> plan = SortPlan("shared", local_impl="pallas", block_n=512)
     >>> SortPlan.from_dict(plan.to_dict()) == plan
     True
+    >>> SortPlan("cluster", mode="range").effective_partition()
+    'radix'
+    >>> SortPlan("cluster", mode="range", partition="sample").partitioner_mode()
+    'sample'
     """
 
     strategy: str = "shared"
@@ -125,6 +153,7 @@ class SortPlan:
     mode: str = "splitters"
     block_n: Optional[int] = None
     us_per_call: float = -1.0
+    partition: Optional[str] = None
 
     def to_dict(self) -> dict:
         return asdict(self)
@@ -133,6 +162,22 @@ class SortPlan:
     def from_dict(cls, d: dict) -> "SortPlan":
         known = {k: d[k] for k in cls.__dataclass_fields__ if k in d}
         return cls(**known)
+
+    def effective_partition(self) -> str:
+        """The partition family this plan runs: the explicit ``partition``
+        override if set, else ``mode``'s own family."""
+        return self.partition or partition_of(self.mode)
+
+    def partitioner_mode(self) -> str:
+        """The concrete partitioner mode ``run_plan`` should execute.
+
+        ``mode`` itself when it already belongs to ``effective_partition``'s
+        family; otherwise the family's canonical mode (``"sample"`` /
+        ``"radix"``) — a promoted radix plan runs sample splitters.
+        """
+        if self.partition is None or partition_of(self.mode) == self.partition:
+            return self.mode
+        return "sample" if self.partition == "sample" else "radix"
 
 
 def mesh_fingerprint(mesh=None) -> str:
@@ -258,7 +303,10 @@ def run_plan(
     if plan.strategy == "cluster":
         kwargs.setdefault("local_impl", plan.local_impl)
         kwargs.setdefault("block_n", plan.block_n)
-        kwargs.setdefault("mode", plan.mode)
+        # partitioner_mode folds the plan's partition override in: a plan
+        # promoted to the sample partition executes sample splitters even
+        # though its tuned mode is still the radix one it was swept at
+        kwargs.setdefault("mode", plan.partitioner_mode())
         kwargs.setdefault("capacity_factor", plan.capacity_factor)
         return cluster_sort(x, mesh, axis, **kwargs)
     raise ValueError(f"unknown plan strategy {plan.strategy!r}")
@@ -297,9 +345,14 @@ def candidate_plans(mesh=None, *, quick: bool = False):
     if mesh is not None:
         cands += [SortPlan("distributed_merge", local_impl="xla")]
         cfs = (2.0,) if quick else (1.5, 2.0)
+        # sweep the partition policy too: the composite-splitter sample mode
+        # and (full sweeps only) the auto-ranged radix mode compete with the
+        # historic plain-splitters mode on the measured workload
+        modes = ("splitters", "sample") if quick else ("splitters", "sample", "radix")
         cands += [
-            SortPlan("cluster", local_impl="xla", capacity_factor=cf, mode="splitters")
+            SortPlan("cluster", local_impl="xla", capacity_factor=cf, mode=md)
             for cf in cfs
+            for md in modes
         ]
     return cands
 
@@ -360,6 +413,10 @@ class Planner:
             if plan.strategy not in _PLAN_STRATEGIES:
                 raise ValueError(
                     f"plan entry {k!r} has unknown strategy {plan.strategy!r}"
+                )
+            if plan.partition is not None and plan.partition not in PARTITION_MODES:
+                raise ValueError(
+                    f"plan entry {k!r} has unknown partition {plan.partition!r}"
                 )
             plans[k] = plan
         raw_learned = doc.get("learned", {})  # absent in v1 files
@@ -507,13 +564,18 @@ class Planner:
 
     def plan_for(self, n: int, dtype, mesh=None) -> SortPlan:
         """Tuned plan if one exists, else the pre-engine default rule — with
-        the learned capacity factor folded into cluster plans, so steady-state
-        callers size model-D slabs right on their first compile."""
+        the learned capacity factor folded into cluster plans (so
+        steady-state callers size model-D slabs right on their first
+        compile) and the skew-promotion latch applied: a radix-family plan
+        whose cell the learner promoted comes back with
+        ``partition="sample"``."""
         plan = self.lookup(n, dtype, mesh) or default_plan(mesh)
         if plan.strategy == "cluster":
-            cf = self.capacity_factor_for(
-                plan_key(n, dtype, mesh), default=plan.capacity_factor
-            )
+            key = plan_key(n, dtype, mesh)
+            promoted, _ = self.promotion_state(key)
+            if promoted == "sample" and plan.effective_partition() == "radix":
+                plan = replace(plan, partition="sample")
+            cf = self.capacity_factor_for(key, default=plan.capacity_factor)
             if cf != plan.capacity_factor:
                 plan = replace(plan, capacity_factor=cf)
         return plan
@@ -544,6 +606,19 @@ class Planner:
             entry = self.learned.get(key)
         return entry.capacity_factor if entry is not None else default
 
+    def promotion_state(self, key: str) -> tuple:
+        """``(partition, skew_strikes)`` of a key's learned entry — the
+        skew-promotion latch, observable without touching private state.
+        ``(None, 0)`` until the key has radix-skew history; ``("sample", _)``
+        once promotion latched (the scope policy is applied, so a caller
+        always reads the entry its own observations feed)."""
+        key = self.scoped_key(key)
+        with self._lock:
+            entry = self.learned.get(key)
+        if entry is None:
+            return (None, 0)
+        return (entry.partition, entry.skew_strikes)
+
     # persistence debounce: a learned-factor move below this fraction of the
     # default stays in memory only — skew that fluctuates call-to-call must
     # not turn the sort hot path into a full-file rewrite per call
@@ -563,17 +638,29 @@ class Planner:
             prev = self.learned.get(key)
             prev_cf = prev.capacity_factor if prev else default
             cf = self.learner.update(prev_cf, obs, default=default)
+            prev_part = prev.partition if prev else None
+            strikes = self.learner.promotion_strikes(
+                prev.skew_strikes if prev else 0, obs
+            )
+            part = prev_part
+            if part != "sample" and self.learner.should_promote(strikes):
+                part = "sample"  # the latch: merge keeps it, decay can't undo
             entry = LearnedCapacity(
                 capacity_factor=cf,
                 peak_factor=max(
                     prev.peak_factor if prev else 0.0, obs.required_factor()
                 ),
                 observations=(prev.observations if prev else 0) + 1,
+                partition=part,
+                skew_strikes=strikes,
             )
             self.learned[key] = entry
-            changed = cf != prev_cf and (
-                abs(cf - prev_cf) >= self._SAVE_REL_DELTA * default
-                or cf == default  # the decay's landing point is worth a write
+            changed = part != prev_part or (
+                cf != prev_cf
+                and (
+                    abs(cf - prev_cf) >= self._SAVE_REL_DELTA * default
+                    or cf == default  # the decay's landing point: worth a write
+                )
             )
             self._stats_sinks = [r for r in self._stats_sinks if r() is not None]
             sinks = list(self._stats_sinks)
@@ -604,7 +691,13 @@ class Planner:
         return self.exchange_recorder(plan_key(n, dtype, mesh), default=default)
 
     def cluster_kwargs(
-        self, n: int, dtype, mesh=None, *, default: Optional[float] = None
+        self,
+        n: int,
+        dtype,
+        mesh=None,
+        *,
+        default: Optional[float] = None,
+        mode: Optional[str] = None,
     ) -> dict:
         """The ``capacity_factor=`` / ``telemetry=`` kwargs that close the
         capacity-learning loop for one cluster call — the one policy both
@@ -612,7 +705,16 @@ class Planner:
         passed neither kwarg: an explicit value opts the call out of the
         whole loop, reading and writing).  ``default`` is the learner's
         floor; when omitted, a tuned cluster plan's own factor (if any) is
-        used so a cell that won at a lean factor is never re-inflated."""
+        used so a cell that won at a lean factor is never re-inflated.
+
+        ``mode`` is a *hint*, not a request: pass the partitioner mode the
+        caller will run (or None if the caller uses the default).  When the
+        caller has no explicit mode and this cell's learned entry carries
+        the skew-promotion latch, the returned dict additionally includes
+        ``"mode": "sample"`` — and the learner floor drops to
+        ``SAMPLE_DEFAULT_FACTOR`` so the capacity factor the radix era
+        inflated decays back toward ~1.  A caller-chosen mode is always
+        respected (no key collision, no silent override)."""
         if default is None:
             base = self.lookup(n, dtype, mesh)
             default = (
@@ -621,10 +723,15 @@ class Planner:
                 else SortPlan.capacity_factor
             )
         key = plan_key(n, dtype, mesh)
-        return {
-            "capacity_factor": self.capacity_factor_for(key, default=default),
-            "telemetry": self.recorder(n, dtype, mesh, default=default),
-        }
+        out = {}
+        if mode is None:
+            promoted, _ = self.promotion_state(key)
+            if promoted == "sample":
+                out["mode"] = "sample"
+                default = min(default, SAMPLE_DEFAULT_FACTOR)
+        out["capacity_factor"] = self.capacity_factor_for(key, default=default)
+        out["telemetry"] = self.recorder(n, dtype, mesh, default=default)
+        return out
 
     def add_stats_sink(self, service) -> None:
         """Register a service whose stats should see exchange retry/recompile

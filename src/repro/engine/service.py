@@ -52,7 +52,11 @@ class ServiceStats:
     vanished; now it rides the same ledger ``serve.py --stats`` prints.
     They mirror planner-wide telemetry: every service sharing a planner (the
     process-wide default, usually) sees the same counts, so read them as
-    "what the planner saw", not a per-service sum.
+    "what the planner saw", not a per-service sum.  ``peak_mean_ratio`` is
+    the largest peak/mean bucket-load ratio any observed exchange reported —
+    the skew signal radix->sample promotion decisions read; ~1.0 means
+    balanced partitions, values past the learner's ``promote_ratio`` mean
+    promotion is (or soon will be) in play.
 
     >>> ServiceStats(keys_in=100, elapsed_s=2.0).throughput_keys_per_s()
     50.0
@@ -67,6 +71,7 @@ class ServiceStats:
     cache_hits: int = 0
     overflow_retries: int = 0
     recompiles: int = 0
+    peak_mean_ratio: float = 0.0
     _busy_until: float = field(default=0.0, repr=False, compare=False)
 
     def throughput_keys_per_s(self) -> float:
@@ -125,10 +130,14 @@ class SortService:
 
     def _note_exchange(self, obs) -> None:
         """Planner stats-sink hook: fold one exchange observation's retry and
-        recompile cost into this service's ledger."""
+        recompile cost — and its peak/mean bucket ratio — into this
+        service's ledger."""
         with self._lock:
             self.stats.overflow_retries += obs.retries
             self.stats.recompiles += obs.recompiles
+            self.stats.peak_mean_ratio = max(
+                self.stats.peak_mean_ratio, obs.peak_mean_ratio()
+            )
 
     # ------------------------------------------------------------ builders ---
     @staticmethod

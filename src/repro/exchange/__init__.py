@@ -24,11 +24,26 @@ retry      : ``run_with_capacity_retries`` — the capacity-doubling retry
              driver with per-attempt recompile accounting
 telemetry  : ``ExchangeObservation`` / ``ExchangeTelemetry`` — the ledger
              the learning loop feeds on
+partition  : the bucket-assignment policy — ``radix_bucket_ids`` (auto-ranged
+             equal-width) vs ``sample_partition_ids`` (composite-splitter
+             samplesort, balanced under any skew), ``partition_of``
+             classifying every partitioner mode into the two families the
+             planner persists and the learner promotes between
 
 See docs/exchange.md for the layer's design and the model-D-sort vs
 MoE-dispatch comparison.
 """
 from .collective import ExchangeResult, combine_exchange, partition_exchange
+from .partition import (
+    DEFAULT_OVERSAMPLE,
+    PARTITION_MODES,
+    choose_splitters,
+    partition_of,
+    radix_bucket_ids,
+    sample_partition_ids,
+    splitter_bucket,
+    splitters_from_sample,
+)
 from .retry import run_with_capacity_retries
 from .slabs import (
     expert_capacity,
@@ -39,16 +54,25 @@ from .slabs import (
 )
 from .telemetry import ExchangeObservation, ExchangeTelemetry
 
+# PARTITION_MODES / DEFAULT_OVERSAMPLE are importable constants but stay out
+# of __all__: the docs gate doctests every __all__ export's docstring, and
+# plain constants carry their type's docstring
 __all__ = [
     "ExchangeObservation",
     "ExchangeResult",
     "ExchangeTelemetry",
+    "choose_splitters",
     "combine_exchange",
     "expert_capacity",
     "partition_exchange",
+    "partition_of",
+    "radix_bucket_ids",
     "run_with_capacity_retries",
+    "sample_partition_ids",
     "sentinel_for",
     "slab_capacity",
     "slab_geometry",
     "slab_valid",
+    "splitter_bucket",
+    "splitters_from_sample",
 ]

@@ -21,6 +21,7 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
+from .partition import radix_bucket_ids, sample_partition_ids
 from .slabs import sentinel_for
 
 __all__ = ["ExchangeResult", "combine_exchange", "partition_exchange"]
@@ -105,12 +106,14 @@ def _compressed_a2a(axis_name: str, P_: int, row: int):
 def partition_exchange(
     keys: jax.Array,
     values: Any,
-    bucket_ids: jax.Array,
+    bucket_ids: Optional[jax.Array],
     axis_name: str,
     *,
     capacity: int,
     n_buckets: Optional[int] = None,
     compress: bool = False,
+    partition: Optional[str] = None,
+    oversample: Optional[int] = None,
 ) -> ExchangeResult:
     """Ship every element to the shard owning its bucket (call inside shard_map).
 
@@ -119,6 +122,13 @@ def partition_exchange(
     be a multiple of it; buckets map to shards contiguously (shard =
     bucket * P // n_buckets) so bucket order == shard order (global sortedness
     / expert grouping both rely on this). ``capacity`` is per (sender, bucket).
+
+    ``bucket_ids=None`` derives the ids in-graph from ``partition``:
+    ``"radix"`` auto-ranged equal-width buckets, ``"sample"`` balanced
+    composite splitters (``oversample`` tunes the sample size; values ride
+    stably, so the sample partition uses arrival-order tie ids whenever
+    ``values`` travel).  Passing explicit ``bucket_ids`` keeps the historic
+    contract — MoE routers and custom partitioners are unaffected.
 
     ``compress=True`` ships *float* value payloads as int8 with a per-element
     f32 scale (beyond-paper: ~0.53x wire bytes for bf16 tokens; quantization
@@ -147,6 +157,18 @@ def partition_exchange(
     B = P_ if n_buckets is None else n_buckets
     if B % P_:
         raise ValueError(f"n_buckets={B} must be a multiple of axis size {P_}")
+    if bucket_ids is None:
+        if partition == "radix":
+            bucket_ids = radix_bucket_ids(keys, B, axis_name)
+        elif partition == "sample":
+            kw = {} if oversample is None else {"oversample": oversample}
+            bucket_ids = sample_partition_ids(
+                keys, B, axis_name, stable=values is not None, **kw
+            )
+        else:
+            raise ValueError(
+                f"bucket_ids=None needs partition in ('radix', 'sample'), got {partition!r}"
+            )
     sent = sentinel_for(keys.dtype, largest=True)
 
     # --- group by bucket (stable: preserves arrival order per bucket) ---

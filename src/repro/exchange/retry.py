@@ -34,6 +34,7 @@ def run_with_capacity_retries(
     lru,
     label: str,
     strict: bool = True,
+    partition: Optional[str] = None,
 ):
     """Shared capacity-doubling retry driver for exchange-based paths.
 
@@ -77,6 +78,7 @@ def run_with_capacity_retries(
                 overflowed=overflowed,
                 retries=retries,
                 recompiles=recompiles,
+                partition=partition,
             )
 
     for attempt in range(max_retries + 1):

@@ -36,8 +36,12 @@ class ExchangeObservation:
     ...                           peak=48, overflowed=True, retries=1)
     >>> obs.required_factor()
     3.0
+    >>> obs.peak_mean_ratio()              # 3x the mean bucket load: skewed
+    3.0
     >>> obs.dropped, obs.dropped_averted   # sorts never drop; MoE may
     (0, 0)
+    >>> obs.partition is None              # caller didn't tag the family
+    True
     """
 
     m: int                  # per-shard element count
@@ -51,10 +55,29 @@ class ExchangeObservation:
     #                         retry-exhausted path: final attempt overflowed)
     dropped_averted: int = 0  # elements retried attempts would have lost
     #                           (recomputed loss-free, so not in the output)
+    partition: Optional[str] = None  # partition family that produced the
+    #                                  bucket ids ("radix"/"sample"); None for
+    #                                  callers outside the policy (e.g. MoE,
+    #                                  where the router is the partitioner)
 
     def required_factor(self) -> float:
         """Smallest ``capacity_factor`` that fits ``peak`` without overflow."""
         return self.peak * self.part_buckets / max(self.m, 1)
+
+    def peak_mean_ratio(self) -> float:
+        """Peak bucket load over the mean bucket load (``m / part_buckets``).
+
+        The skew signal: 1.0 is a perfectly balanced partition, and the
+        ``CapacityLearner`` promotes a persistently-radix key to the sample
+        partition when this stays above its ``promote_ratio``.  Numerically
+        identical to ``required_factor`` — capacity need *is* peak/mean —
+        but named for what promotion decisions actually read.
+
+        >>> ExchangeObservation(m=64, part_buckets=8, capacity=16, peak=8,
+        ...                     overflowed=False, retries=0).peak_mean_ratio()
+        1.0
+        """
+        return self.required_factor()
 
 
 class ExchangeTelemetry:
@@ -123,6 +146,15 @@ class ExchangeTelemetry:
         with self._lock:
             window = self._obs.get(key, ())
             return max((o.required_factor() for o in window), default=0.0)
+
+    def last_ratio(self, key: str) -> float:
+        """Most recent ``peak_mean_ratio`` for ``key`` (0.0 before any call).
+
+        The per-key skew signal promotion decisions read — exposed here so
+        operators and tests observe it without touching learner internals.
+        """
+        obs = self.last(key)
+        return obs.peak_mean_ratio() if obs is not None else 0.0
 
     def keys(self):
         with self._lock:

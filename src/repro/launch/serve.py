@@ -371,6 +371,7 @@ def main(argv=None):
                   f"cache_hits={qs.cache_hits} "
                   f"overflow_retries={qs.overflow_retries} "
                   f"recompiles={qs.recompiles} "
+                  f"peak_mean_ratio={qs.peak_mean_ratio:.2f} "
                   f"throughput={qs.throughput_keys_per_s():.0f} keys/s")
     assert gen.min() >= 0 and gen.max() < cfg.vocab_size, "pad-vocab leak!"
     return gen

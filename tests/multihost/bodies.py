@@ -228,7 +228,9 @@ def sort_learn_body(ctx):
     x_np = rng.integers(0, hi // 64, size=n).astype(np.int32)
     mesh = ctx.mesh()
     x = ctx.global_array(x_np, mesh)
-    kwargs = planner.cluster_kwargs(n, jnp.int32, mesh)
+    # mode= is passed explicitly below, so hint it to cluster_kwargs: a
+    # skew-promoted cell must not inject a second "mode" key into kwargs
+    kwargs = planner.cluster_kwargs(n, jnp.int32, mesh, mode="range")
     slab, valid = cluster_sort(x, mesh, "x", mode="range", lo=0, hi=hi, **kwargs)
     got = ctx.allgather(slab)[ctx.allgather(valid).astype(bool)]
     assert np.array_equal(got, np.sort(x_np))
@@ -239,6 +241,78 @@ def sort_learn_body(ctx):
         "scoped_key": planner.scoped_key(key),
         "learned_factor": planner.capacity_factor_for(key),
         "learned_keys": sorted(planner.learned),
+    }
+
+
+def skew_promotion_body(ctx):
+    """The radix->sample auto-promotion loop across a real multi-process mesh.
+
+    Every rank serves the same persistently skewed (Zipfian) keys through the
+    planner's capacity-learning loop against one shared plan-cache file: the
+    cell starts on the radix partition, accrues skew strikes, latches to the
+    sample partition, and a fresh planner over the same file (the simulated
+    restart) comes back already promoted.  The per-step (mode, retries,
+    ratio) trace is returned so the coordinator can assert the multi-process
+    trajectory is bit-identical to the single-process forced-mesh one.
+    """
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.cluster_sort import cluster_sort
+    from repro.engine.adapt import CapacityLearner
+    from repro.engine.planner import Planner, plan_key
+
+    a = ctx.args
+    planner = Planner(a["plans_path"], learned_scope=a.get("scope", "global"))
+    # a 2-shard mesh has only 2 buckets, so peak/mean tops out at exactly
+    # 2.0 — the default promote_ratio can never be *exceeded* there; small
+    # topologies lower the threshold (an operator knob, not a test cheat)
+    if "promote_ratio" in a:
+        planner.learner = CapacityLearner(promote_ratio=a["promote_ratio"])
+    n, seed, steps = a.get("n", 256), a.get("seed", 0), a.get("steps", 5)
+    rng = np.random.default_rng(seed)
+    x_np = np.minimum(rng.zipf(1.5, n), 1 << 30).astype(np.int32)
+    mesh = ctx.mesh()
+    x = ctx.global_array(x_np, mesh)
+    key = plan_key(n, jnp.int32, mesh)
+    want = np.sort(x_np)
+
+    trace = []
+    for _ in range(steps):
+        kwargs = planner.cluster_kwargs(n, jnp.int32, mesh, default=2.0)
+        # un-promoted: no "mode" key -> run the radix family this loop is
+        # about; promoted: the planner injected "mode": "sample"
+        mode = kwargs.pop("mode", "radix")
+        slab, valid = cluster_sort(x, mesh, "x", mode=mode, **kwargs)
+        got = ctx.allgather(slab)[ctx.allgather(valid).astype(bool)]
+        assert np.array_equal(got, want), f"{mode}-mode sort output wrong"
+        obs = planner.telemetry.last(planner.scoped_key(key))
+        part, strikes = planner.promotion_state(key)
+        trace.append(
+            {
+                "mode": mode,
+                "partition": obs.partition,
+                "retries": int(obs.retries),
+                "ratio": round(planner.telemetry.last_ratio(planner.scoped_key(key)), 4),
+                "promoted": part,
+                "strikes": strikes,
+            }
+        )
+    planner.save()
+
+    # simulated restart: a fresh planner over the shared locked plan cache
+    # must come back already promoted, and its serving path (cluster_kwargs)
+    # must inject the sample mode on the very first call
+    p2 = Planner(a["plans_path"], learned_scope=a.get("scope", "global"))
+    part2, strikes2 = p2.promotion_state(key)
+    return {
+        "trace": trace,
+        "restart_partition": part2,
+        "restart_strikes": strikes2,
+        "restart_mode": p2.cluster_kwargs(n, jnp.int32, mesh, default=2.0).get(
+            "mode"
+        ),
+        "sorted": got.tolist(),
     }
 
 

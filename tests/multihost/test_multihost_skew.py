@@ -1,0 +1,125 @@
+"""Sample partition + skew auto-promotion across real multi-process meshes.
+
+The single-process skew battery (tests/test_skew.py) proves the sample
+partition balances adversarial key distributions; these tests prove the
+same machinery across genuinely separate ``jax.distributed`` processes:
+
+* sample-mode ``cluster_sort`` on 2- and 4-process meshes is bit-identical
+  to the single-process forced-mesh reference (the composite-splitter
+  all-gather must be a pure re-plumbing of the same math), and
+* the radix->sample auto-promotion loop runs end to end with every rank
+  learning into one shared, fcntl-locked plan-cache file — same per-step
+  trajectory on every rank, same trajectory as the forced-mesh run, and a
+  promoted partition that persists through the cache into a fresh planner.
+"""
+import json
+import os
+
+import pytest
+
+import harness
+
+pytestmark = pytest.mark.multihost
+
+
+def test_sample_mode_2proc_bit_identical_to_forced():
+    args = {"n": 256, "seed": 13, "mode": "sample"}
+    multi = harness.run_multihost(
+        "bodies.py:cluster_sort_body", 2, args=args
+    ).require_success()
+    forced = harness.run_forced_mesh(
+        "bodies.py:cluster_sort_body", 2, args=args
+    ).require_success()
+    r0, r1 = multi.results()
+    assert r0["sorted"] == r1["sorted"], "ranks disagree on sample-mode output"
+    assert r0["sorted"] == forced.result()["sorted"], (
+        "2-process sample-mode sort differs from the single-process "
+        "2-device reference"
+    )
+
+
+def test_sample_mode_4proc_bit_identical_to_forced():
+    args = {"n": 512, "seed": 21, "mode": "sample"}
+    multi = harness.run_multihost(
+        "bodies.py:cluster_sort_body", 4, args=args
+    ).require_success()
+    results = multi.results()
+    assert all(r["sorted"] == results[0]["sorted"] for r in results)
+    forced = harness.run_forced_mesh(
+        "bodies.py:cluster_sort_body", 4, args=args
+    ).require_success()
+    assert results[0]["sorted"] == forced.result()["sorted"]
+
+
+def _check_promotion_trace(trace):
+    """The canonical trajectory: a radix era accruing strikes, a latch, then
+    a balanced zero-retry sample era."""
+    assert trace[0]["mode"] == "radix" and trace[0]["partition"] == "radix"
+    assert trace[0]["promoted"] is None
+    flip = next(i for i, t in enumerate(trace) if t["promoted"] == "sample")
+    assert trace[flip]["strikes"] >= 3
+    post = trace[flip + 1:]
+    assert post, "need post-promotion steps in the trace"
+    for t in post:
+        assert t["mode"] == "sample" and t["partition"] == "sample"
+        assert t["retries"] == 0, f"promoted cell still overflowing: {t}"
+        assert t["ratio"] <= 1.5, f"promoted cell still skewed: {t}"
+    return flip
+
+
+def test_skew_promotion_2proc_persists_through_locked_cache(tmp_path):
+    # a 2-shard mesh has 2 buckets, so peak/mean tops out at exactly 2.0 and
+    # can never *exceed* the default promote_ratio — the body lowers the
+    # threshold for this topology (see skew_promotion_body)
+    plans_path = os.path.join(str(tmp_path), "plans.json")
+    args = {
+        "plans_path": plans_path, "n": 256, "seed": 2, "steps": 5,
+        "promote_ratio": 1.5,
+    }
+    run = harness.run_multihost(
+        "bodies.py:skew_promotion_body", 2, args=args
+    ).require_success()
+    r0, r1 = run.results()
+    assert r0["trace"] == r1["trace"], "ranks disagree on the promotion path"
+    _check_promotion_trace(r0["trace"])
+    assert r0["restart_partition"] == "sample"
+    assert r0["restart_mode"] == "sample", (
+        "a restarted planner's serving path must inject sample mode"
+    )
+
+    # the shared file both ranks wrote through the fcntl lock carries the
+    # latch in v3 schema
+    with open(plans_path) as f:
+        doc = json.load(f)
+    assert doc["version"] == 3
+    (entry,) = doc["learned"].values()
+    assert entry["partition"] == "sample" and entry["skew_strikes"] >= 3
+
+    # the forced-mesh reference walks the identical trajectory (own file:
+    # its fingerprint is a different cell, but the math must match)
+    forced = harness.run_forced_mesh(
+        "bodies.py:skew_promotion_body", 2,
+        args={**args, "plans_path": os.path.join(str(tmp_path), "forced.json")},
+    ).require_success()
+    assert forced.result()["trace"] == r0["trace"]
+    assert forced.result()["sorted"] == r0["sorted"]
+
+
+def test_skew_promotion_4proc_default_threshold(tmp_path):
+    # 4 buckets: Zipf concentrates ~all keys into one, ratio ~4 > the
+    # default promote_ratio, and cf=2.0 capacity genuinely overflows — the
+    # full production configuration, no threshold override
+    plans_path = os.path.join(str(tmp_path), "plans.json")
+    args = {"plans_path": plans_path, "n": 512, "seed": 4, "steps": 5}
+    run = harness.run_multihost(
+        "bodies.py:skew_promotion_body", 4, args=args
+    ).require_success()
+    results = run.results()
+    assert all(r["trace"] == results[0]["trace"] for r in results)
+    flip = _check_promotion_trace(results[0]["trace"])
+    assert results[0]["trace"][0]["retries"] >= 1, (
+        "radix mode should pay overflow retries on 4-bucket Zipf data"
+    )
+    assert flip >= 2, "promotion needs persistent skew, not one bad call"
+    assert all(r["restart_partition"] == "sample" for r in results)
+    assert results[0]["restart_mode"] == "sample"

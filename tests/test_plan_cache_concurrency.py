@@ -118,7 +118,7 @@ def test_threaded_saves_keep_every_key(tmp_path):
     final = Planner(path)
     assert len(final.learned) == n_threads * keys_per_thread
     with open(path) as f:
-        assert json.load(f)["version"] == 2  # file is intact, not torn
+        assert json.load(f)["version"] == 3  # file is intact, not torn
 
 
 # ------------------------------------------------------ key round-tripping ---
@@ -173,12 +173,21 @@ _entries = st.lists(
 )  # (cf, peak, raw-obs) triples; obs quantized below
 
 
+_PARTITION_RANK = {None: 0, "radix": 1, "sample": 2}
+
+
 def _entry(triple):
     cf, peak, raw = triple
+    # partition/skew_strikes derived from the same floats so the lattice
+    # properties get exercised across all three partition states without
+    # needing richer strategies than the hypothesis shim provides
+    parts = (None, "radix", "sample")
     return LearnedCapacity(
         capacity_factor=round(cf, 2),
         peak_factor=round(peak, 2),
         observations=int(raw * 10),
+        partition=parts[int(raw * 100) % 3],
+        skew_strikes=int(cf * 10) % 7,
     )
 
 
@@ -192,6 +201,11 @@ def test_learned_capacity_merge_is_semilattice(a, b, c):
     assert merged.peak_factor == max(ea.peak_factor, eb.peak_factor)
     assert merged.observations == max(ea.observations, eb.observations)
     assert merged.capacity_factor in (ea.capacity_factor, eb.capacity_factor)
+    assert merged.skew_strikes == max(ea.skew_strikes, eb.skew_strikes)
+    # the promotion latch: merge never demotes the partition family
+    assert _PARTITION_RANK[merged.partition] == max(
+        _PARTITION_RANK[ea.partition], _PARTITION_RANK[eb.partition]
+    )
 
 
 def test_merge_lets_own_decay_win_over_stale_disk_state():

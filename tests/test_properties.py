@@ -23,6 +23,7 @@ except ImportError:  # bare container — requirements-dev.txt installs the real
 from conftest import run_with_devices
 from repro.core import sort
 from repro.engine import AsyncSortService, SortService, argsort, sort_pairs, topk
+from repro.exchange import splitter_bucket, splitters_from_sample
 
 # fixed + derandomized: the same examples on every CI run
 settings.register_profile("repro-ci", max_examples=10, deadline=None,
@@ -133,6 +134,32 @@ def test_engine_kv_argsort_sortkv_topk(n, case, dtype, seed):
         np.testing.assert_array_equal(np.asarray(vals), k[refd[:kt]], err_msg=impl)
 
 
+# ------------------------------------------- splitter derivation (sample) ---
+@given(st.integers(8, 2048), st.integers(2, 32), cases, dtypes, seeds)
+def test_splitter_derivation_properties(n, n_buckets, case, dtype, seed):
+    """The sample partition's splitter math, against the same case matrix:
+    splitters come back sorted and deduplicated, derivation is a pure
+    function of the sample, and the induced bucket assignment is total and
+    order-compatible with the key order."""
+    sample = make_keys(case, n, dtype, seed)
+    spl = np.asarray(splitters_from_sample(sample, n_buckets, unique=True))
+    again = np.asarray(splitters_from_sample(sample, n_buckets, unique=True))
+    np.testing.assert_array_equal(spl, again)      # deterministic
+    assert 1 <= len(spl) <= n_buckets - 1
+    if len(spl) > 1:
+        assert np.all(np.diff(spl) > 0)            # sorted + deduplicated
+    # the partition they induce: every key lands in exactly one bucket ...
+    keys = make_keys(case, n, dtype, seed + 1)
+    b = np.asarray(splitter_bucket(jnp.asarray(keys), jnp.asarray(spl)))
+    assert b.shape == keys.shape
+    assert b.min() >= 0 and b.max() <= len(spl)
+    assert int(np.bincount(b, minlength=len(spl) + 1).sum()) == n
+    # ... and the assignment is monotone in the key (order-compatible:
+    # concatenating bucket-sorted buckets yields the globally sorted order)
+    order = np.argsort(keys, kind="stable")
+    assert np.all(np.diff(b[order]) >= 0)
+
+
 # ------------------------------------------------------------- services -----
 @given(st.lists(st.integers(1, 600), min_size=1, max_size=5), cases, dtypes, seeds)
 def test_sort_service_ragged_batches(lens, case, dtype, seed):
@@ -219,5 +246,16 @@ def test_api_sort_distributed_models_case_matrix():
                                        mesh=mesh, axis="x", local_impl=impl, **kw)
                     got = np.asarray(slab)[np.asarray(valid)]
                     assert (got == want).all(), ("D", impl, case, dtype)
+                # model D again across both partition families (PR 8): the
+                # auto-ranged radix and the composite-splitter sample modes
+                # must match the oracle on every adversarial case too
+                # (explicit capacity_factor= keeps the fuzz out of the
+                # process-wide capacity-learning loop)
+                for mode in ("radix", "sample"):
+                    slab, valid = sort(jnp.asarray(x), strategy="cluster",
+                                       mesh=mesh, axis="x", mode=mode,
+                                       capacity_factor=2.0)
+                    got = np.asarray(slab)[np.asarray(valid)]
+                    assert (got == want).all(), ("D", mode, case, dtype)
         print("C/D case matrix ok")
     """)

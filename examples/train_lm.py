@@ -4,6 +4,10 @@ this exercises the same driver end to end).
 
     PYTHONPATH=src python examples/train_lm.py            # ~20M, 150 steps
     PYTHONPATH=src python examples/train_lm.py --tiny     # smoke (seconds)
+    PYTHONPATH=src python examples/train_lm.py --moe      # tiny MoE LM on a
+        # forced expert-parallel mesh, skewed router: exercises the
+        # between-step capacity-learning loop end to end (CI train-smoke);
+        # point $REPRO_SORT_PLANS at a file to persist the learned factor
 """
 import os
 import sys
@@ -16,10 +20,40 @@ from repro.launch.train import main as train_main
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--tiny", action="store_true")
+ap.add_argument("--moe", action="store_true")
 ap.add_argument("--steps", type=int, default=None)
 args = ap.parse_args()
 
-if args.tiny:
+if args.moe:
+    import math
+    from dataclasses import replace
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs.base import ARCHS
+
+    cfg = replace(
+        ARCHS["qwen3-0.6b"],
+        name="qwen3-moe-tiny",
+        n_layers=2, d_model=32, n_heads=2, n_kv_heads=2, head_dim=16,
+        d_ff=32, vocab_size=128, kv_chunk=16,
+        pattern=("attn",), ffn_pattern=("moe",),
+        # cf=1.0 on a collapsed router guarantees step-1 overflow — the
+        # capacity loop must visibly learn (and persist) a higher factor
+        n_experts=8, top_k=2, capacity_factor=1.0,
+        param_dtype=jnp.float32, compute_dtype=jnp.float32,
+    )
+    ARCHS["qwen3-moe-tiny"] = cfg  # register for the driver
+    n_dev = len(jax.devices())
+    mesh = ["--mesh", "data=2,model=4"] if n_dev >= 8 else []
+    losses = train_main([
+        "--arch", "qwen3-moe-tiny", "--steps", str(args.steps or 5),
+        "--batch", "4", "--seq", "32", "--lr", "1e-3", "--moe-skew", "6.0",
+    ] + mesh)
+    assert all(math.isfinite(l) for l in losses), losses
+    print(f"moe-train-smoke: {len(losses)} steps, all losses finite")
+elif args.tiny:
     train_main([
         "--arch", "qwen3-0.6b", "--reduced", "--steps", str(args.steps or 30),
         "--batch", "4", "--seq", "32", "--lr", "5e-3",

@@ -246,9 +246,19 @@ class CapacityLearner:
         *persistent* to promote).  Sample-partition and untagged
         observations pass the counter through unchanged — promotion is a
         judgement about radix behaviour, and e.g. MoE routing skew must not
-        flip a sort cell's partition.
+        flip a sort cell's partition.  *Empty* observations (``m == 0``:
+        an idle tick or a drained shard) also pass through — their
+        ``peak_mean_ratio`` is 0.0 by construction, which says nothing
+        about the distribution, so treating them as "calm" would reset
+        the counter for a genuinely skewed cell.
+
+        >>> lrn = CapacityLearner()
+        >>> empty = ExchangeObservation(m=0, part_buckets=8, capacity=1,
+        ...     peak=0, overflowed=False, retries=0, partition="radix")
+        >>> lrn.promotion_strikes(2, empty)          # not evidence of calm
+        2
         """
-        if obs.partition != "radix":
+        if obs.partition != "radix" or obs.m == 0:
             return strikes
         if obs.peak_mean_ratio() > self.promote_ratio:
             return strikes + 1

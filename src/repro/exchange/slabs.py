@@ -45,10 +45,13 @@ def slab_capacity(m: int, buckets: int, capacity_factor: float) -> int:
 
     A uniform sender spreads its ``m`` elements evenly, ~``m / buckets``
     per bucket; ``capacity_factor`` is the over-provisioning margin on top.
-    Clamped below by 1 slot (a zero-capacity slab can never drain) and above
-    by ``m`` (one sender cannot put more than all its elements into a single
-    bucket — ``capacity == m`` is the loss-free guarantee both the model-D
-    retry driver and the MoE drop path rely on).
+    Clamped below by 1 slot (a zero-capacity slab can never drain — and the
+    retry driver's capacity doubling would pin 0 forever) and above by ``m``
+    (one sender cannot put more than all its elements into a single bucket —
+    ``capacity == m`` is the loss-free guarantee both the model-D retry
+    driver and the MoE drop path rely on).  The 1-slot floor wins over the
+    ``m`` ceiling for an *empty* sender: a drained rank (``m == 0``) still
+    ships well-formed 1-slot slabs through the collective.
 
     >>> slab_capacity(1000, 8, 1.5)     # ceil(1500 / 8)
     188
@@ -56,8 +59,10 @@ def slab_capacity(m: int, buckets: int, capacity_factor: float) -> int:
     64
     >>> slab_capacity(64, 4, 0.001)     # floored at one slot
     1
+    >>> slab_capacity(0, 8, 1.25)       # empty sender: floor beats the bound
+    1
     """
-    return min(m, max(1, -(-int(capacity_factor * m) // max(buckets, 1))))
+    return max(1, min(m, -(-int(capacity_factor * m) // max(buckets, 1))))
 
 
 def slab_geometry(mode: str, m: int, P_: int, capacity_factor: float):
@@ -97,6 +102,8 @@ def expert_capacity(tokens: int, top_k: int, n_experts: int,
     1
     >>> expert_capacity(32, 2, 4, 8.0)      # clamped to tokens * top_k
     64
+    >>> expert_capacity(0, 2, 8, 1.25)      # empty shard/microbatch: never 0
+    1
     """
     return slab_capacity(tokens * top_k, n_experts, capacity_factor)
 

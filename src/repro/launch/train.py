@@ -6,9 +6,20 @@ synthetic data pipeline -> checkpoint manager -> fault-tolerant control loop
 reduced configs for real (examples/train_lm.py uses it); on a pod the same
 driver runs the full configs — the dry-run proves those lower.
 
+MoE archs close the capacity-learning loop during training: a
+``MoECapacityController`` reads the planner's learned factor before each
+step (capacity is static, so a learned bump recompiles the step once),
+folds the step's ``moe_dropped``/``moe_peak`` metrics back in afterwards,
+and persists factors to the shared plan cache ($REPRO_SORT_PLANS or
+--plans) — capacity learned here warms ``serve.py --moe`` and vice versa.
+The planner's telemetry ledger feeds ``AnomalyMonitor.watch_exchange``, so
+a collapsing router trips recovery instead of silently dropping tokens.
+
 Usage:
   python -m repro.launch.train --arch qwen3-0.6b --steps 50 --reduced \
       --batch 8 --seq 64 --ckpt-dir /tmp/ckpt
+  python -m repro.launch.train --arch granite-moe-3b-a800m --reduced \
+      --mesh data=2,model=4 --plans /tmp/plans.json
 """
 from __future__ import annotations
 
@@ -26,7 +37,12 @@ from repro.data.pipeline import Prefetcher, SyntheticLM
 from repro.distributed.fault_tolerance import AnomalyMonitor, run_with_recovery
 from repro.models.transformer import ShardCtx, model_init
 from repro.optim.adamw import OptConfig, init_opt_state
+from repro.train.adaptive import MoECapacityController, parse_mesh_spec
 from repro.train.steps import train_step
+
+
+def _has_moe(cfg) -> bool:
+    return cfg.n_experts > 0 and "moe" in cfg.ffn_pattern
 
 
 def main(argv=None):
@@ -44,14 +60,37 @@ def main(argv=None):
     ap.add_argument("--compress-grads", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--mesh", default="",
+                    help="axis=size,... mesh spec (e.g. data=2,model=4); "
+                         "experts shard over the 'model' axis")
+    ap.add_argument("--plans", default="",
+                    help="plan-cache path for learned MoE capacity factors "
+                         "(default: $REPRO_SORT_PLANS via the process planner)")
+    ap.add_argument("--moe-skew", type=float, default=0.0,
+                    help="collapse every MoE router at this logit scale — "
+                         "worst-case skew for capacity-loop demos/tests")
     args = ap.parse_args(argv)
 
     cfg = ARCHS[args.arch]
     if args.reduced:
         cfg = reduced(cfg)
-    ctx = ShardCtx()  # single-host; pod meshes come from launch/dryrun wiring
+    if args.mesh:
+        mesh, axes = parse_mesh_spec(args.mesh)
+        ctx = ShardCtx(mesh=mesh, axes=axes)
+    else:
+        ctx = ShardCtx()  # single-device; pod meshes come via --mesh
 
     params = model_init(jax.random.PRNGKey(args.seed), cfg, ep_shards=ctx.ep_shards)
+    if args.moe_skew and _has_moe(cfg):
+        from repro.models.moe import collapse_router
+
+        def skew(gp):
+            return {**gp, "moe": collapse_router(gp["moe"], args.moe_skew)}
+
+        params["blocks"] = {
+            pos: skew(gp) if "moe" in gp else gp
+            for pos, gp in params["blocks"].items()
+        }
     n_params = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))
     print(f"arch={cfg.name} params={n_params/1e6:.2f}M steps={args.steps}")
 
@@ -63,16 +102,35 @@ def main(argv=None):
         compress_grads=args.compress_grads,
     )
     opt = init_opt_state(params, ocfg)
-    step_fn = jax.jit(
-        functools.partial(
-            train_step,
-            cfg=cfg,
-            opt_cfg=ocfg,
+
+    controller = planner = None
+    if _has_moe(cfg):
+        from repro.engine.planner import Planner, default_planner
+
+        planner = Planner(args.plans) if args.plans else default_planner()
+        controller = MoECapacityController(
+            cfg.moe_cfg(),
+            tokens=args.batch * args.seq // args.microbatch,
             ctx=ctx,
-            n_microbatch=args.microbatch,
-            loss_chunk=min(64, args.seq),
+            planner=planner,
+            dtype=cfg.compute_dtype,
         )
-    )
+
+    @functools.lru_cache(maxsize=None)
+    def step_fn_for(moe_capacity):
+        # one executable per learned capacity — the static-arg recompile
+        # that makes a capacity bump cost one compile, like serving
+        return jax.jit(
+            functools.partial(
+                train_step,
+                cfg=cfg,
+                opt_cfg=ocfg,
+                ctx=ctx,
+                n_microbatch=args.microbatch,
+                loss_chunk=min(64, args.seq),
+                moe_capacity=moe_capacity,
+            )
+        )
 
     pipe = SyntheticLM(cfg.vocab_size, args.batch, args.seq, seed=args.seed)
     data = Prefetcher(iter(pipe))
@@ -85,13 +143,24 @@ def main(argv=None):
     def one_step(i: int) -> dict:
         b = next(data)
         batch = {k: jnp.asarray(v) for k, v in b.items()}
+        cap = controller.capacity if controller else None
+        step_fn = step_fn_for(cap)
         state["params"], state["opt"], m = step_fn(state["params"], state["opt"], batch)
         m = {k: float(v) if jnp.ndim(v) == 0 else v for k, v in m.items()}
+        if controller:
+            # between-step learning: fold this step's dropped/peak into the
+            # planner so the next step's capacity covers the observed skew
+            controller.observe(m, capacity=cap)
         losses.append(m["loss"])
         if (i + 1) % args.log_every == 0:
             dt = (time.time() - t0) / (i + 1)
+            moe = (
+                f" moe[cap {cap} drop {int(m['moe_dropped'])} "
+                f"peak {int(m['moe_peak'])}]"
+                if controller else ""
+            )
             print(f"step {i+1:5d} loss {m['loss']:.4f} gnorm {m['grad_norm']:.3f} "
-                  f"lr {m['lr']:.2e} {dt*1e3:.0f} ms/step")
+                  f"lr {m['lr']:.2e} {dt*1e3:.0f} ms/step{moe}")
         return m
 
     def save(i: int) -> None:
@@ -109,18 +178,32 @@ def main(argv=None):
         pipe.restore_state(restored["pipeline"])
         return s
 
+    # fresh routers overflow until balanced; short demo runs shouldn't trip
+    monitor = AnomalyMonitor(overflow_patience=max(200, args.steps))
+    if planner is not None:
+        # served MoE drops observed by the controller accrue into the
+        # routing-collapse counter — training now trips recovery on a
+        # collapsing router instead of silently dropping tokens
+        monitor.watch_exchange(planner.telemetry)
+
     summary = run_with_recovery(
         n_steps=args.steps,
         step_fn=one_step,
         save_fn=save,
         restore_fn=restore,
         checkpoint_every=args.ckpt_every,
-        # fresh routers overflow until balanced; short demo runs shouldn't trip
-        monitor=AnomalyMonitor(overflow_patience=max(200, args.steps)),
+        monitor=monitor,
     )
     data.close()
     if mgr:
         mgr.wait()
+    if controller is not None and planner.path:
+        # debounced saves may have skipped the last in-memory move; make the
+        # learned factor durable so serving warm-starts from this run
+        planner.save()
+    if controller is not None:
+        print(f"moe: learned_cf={controller.factor:.2f} "
+              f"capacity={controller.capacity} cell={controller.key}")
     print(f"done: loss {losses[0]:.4f} -> {losses[-1]:.4f} "
           f"({summary['restarts']} restarts)")
     return losses

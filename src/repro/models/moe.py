@@ -86,7 +86,9 @@ def router_probs(p: Params, cfg: MoEConfig, x: jax.Array):
     # Switch-style aux loss: E * sum_e f_e * P_e  (f = token fraction, P = prob mass)
     f = jnp.zeros((e_pad,), jnp.float32).at[top_idx.reshape(-1)].add(1.0)
     f = f / jnp.maximum(f.sum(), 1.0)
-    P_mass = probs.mean(axis=0)
+    # sum/max(T,1), not mean: the mean of an empty axis is NaN, which would
+    # poison the aux loss (and every grad) for a drained shard/microbatch
+    P_mass = probs.sum(axis=0) / max(x.shape[0], 1)
     aux = cfg.n_experts * jnp.sum(f * P_mass)
     return probs, top_idx, top_gate, aux
 
@@ -104,7 +106,9 @@ def collapse_router(p: Params, logit_scale: float = 10.0) -> Params:
     token distribution.
     """
     w = p["router"]["w"]
-    return {**p, "router": {"w": jnp.zeros_like(w).at[:, 0].set(logit_scale)}}
+    # index the expert axis from the end: the router weight is (D, E_pad)
+    # standalone but (n_groups, D, E_pad) inside stacked train params
+    return {**p, "router": {"w": jnp.zeros_like(w).at[..., 0].set(logit_scale)}}
 
 
 def moe_apply_local(
@@ -312,6 +316,35 @@ def _compiled_moe_replicated(cfg: MoEConfig, capacity: int):
     return jax.jit(f)
 
 
+def _drop_report(telemetry, attempt_drops: list):
+    """Wrap a telemetry callback with served/averted drop accounting.
+
+    The retry driver reports once, after the final attempt; routing (and so
+    per-attempt drops) is identical across attempts, only the capacity
+    moves — the final attempt's drops reached the served output iff it
+    still overflowed (peak > its capacity), every earlier attempt's were
+    recomputed away by the retry.  Shared by both adaptive MoE paths
+    (replicated and shard_map expert-parallel) so the telemetry schema
+    can't drift between them.
+    """
+    if telemetry is None:
+        return None
+
+    def report(**kwargs):
+        served = (
+            attempt_drops[-1]
+            if attempt_drops and kwargs["peak"] > kwargs["capacity"]
+            else 0
+        )
+        # later attempts re-drop a subset of the first attempt's tokens,
+        # so distinct at-risk tokens = the first (largest) attempt's
+        # count, not the sum across attempts
+        averted = max(attempt_drops, default=0) - served
+        telemetry(dropped=served, dropped_averted=averted, **kwargs)
+
+    return report
+
+
 def moe_apply_adaptive(
     p: Params,
     cfg: MoEConfig,
@@ -374,24 +407,7 @@ def moe_apply_adaptive(
         attempt_drops.append(int(dropped))
         return out, aux, counts, peak, overflow
 
-    report = telemetry
-    if telemetry is not None:
-        def report(**kwargs):
-            # the driver reports once, after the final attempt; routing (and
-            # so per-attempt drops) is identical across attempts, only the
-            # capacity moves — the final attempt's drops reached the served
-            # output iff it still overflowed (peak > its capacity), every
-            # earlier attempt's were recomputed away by the retry
-            served = (
-                attempt_drops[-1]
-                if attempt_drops and kwargs["peak"] > kwargs["capacity"]
-                else 0
-            )
-            # later attempts re-drop a subset of the first attempt's tokens,
-            # so distinct at-risk tokens = the first (largest) attempt's
-            # count, not the sum across attempts
-            averted = max(attempt_drops, default=0) - served
-            telemetry(dropped=served, dropped_averted=averted, **kwargs)
+    report = _drop_report(telemetry, attempt_drops)
 
     (y, aux), counts = run_with_capacity_retries(
         lambda c: _compiled_moe_replicated(ccfg, c),
@@ -408,11 +424,140 @@ def moe_apply_adaptive(
     return y, aux, counts
 
 
-def moe_shard_specs(params: Params, mesh_axes=("pod", "data", "model"), ep_axis="model"):
+@lru_cache(maxsize=256)
+def _compiled_moe_local(cfg: MoEConfig, capacity: int, mesh, axes: tuple, ep_axis: str):
+    """One jitted shard_map expert-parallel forward per (config, capacity,
+    mesh, axes) — the factory ``run_with_capacity_retries`` counts
+    retry-forced fresh compiles on.  ``jax.Mesh`` hashes by (devices,
+    axis names), so two calls over the same topology share one executable
+    per capacity, exactly like the replicated twin.
+
+    ``dropped``/``counts``/``peak`` come out *mesh*-global (the
+    ``moe_apply_local`` stats are EP-group-global; the extra psum/pmax here
+    folds in the non-EP axes), so the host-side capacity loop reads one
+    scalar per step regardless of topology.
+    """
+
+    def body(mp, xt):
+        out, aux, dropped, counts, peak, overflow = moe_apply_local(
+            mp, cfg, xt, ep_axis, axes, capacity=capacity, with_stats=True
+        )
+        rest = tuple(a for a in axes if a != ep_axis)
+        if rest:
+            dropped = jax.lax.psum(dropped, rest)
+            counts = jax.lax.psum(counts, rest)
+            peak = jax.lax.pmax(peak, rest)
+        return out, aux, dropped, counts, peak, overflow
+
+    def f(p, x):
+        (p_spec, x_spec), out_specs = moe_shard_specs(
+            p, mesh_axes=axes, ep_axis=ep_axis, with_stats=True
+        )
+        return jax.shard_map(
+            body,
+            mesh=mesh,
+            in_specs=(p_spec, x_spec),
+            out_specs=out_specs,
+            check_vma=False,
+        )(p, x)
+
+    return jax.jit(f)
+
+
+def moe_apply_local_adaptive(
+    p: Params,
+    cfg: MoEConfig,
+    x: jax.Array,
+    mesh,
+    *,
+    axes: tuple = ("data", "model"),
+    ep_axis: str = "model",
+    planner=None,
+    capacity_factor: Optional[float] = None,
+    telemetry=None,
+    max_retries: int = 4,
+):
+    """Adaptive *expert-parallel* MoE forward: the shard_map all_to_all
+    dispatch (``moe_apply_local``) under the shared capacity-retry driver.
+
+    The mesh twin of ``moe_apply_adaptive``: runs the paper's model-D
+    dispatch at the learned expert capacity factor for this (n_experts,
+    top_k, token bucket, *mesh*) cell, retries with doubled capacity when
+    the router's skew overflows it, and reports the call's exchange
+    telemetry through the planner so the factor persists in the plan cache
+    — training and serving processes that share a topology (and a
+    ``$REPRO_SORT_PLANS`` file) warm each other.  Capacity is a static
+    compile-cache key, so a learned bump recompiles exactly once; when
+    retries are exhausted the last attempt's output is returned with its
+    drops intact (GShard semantics).
+
+    ``x`` is the *global* (T, D) token batch; T must divide the mesh (the
+    shard_map in_specs split it over every axis in ``axes``).  Passing an
+    explicit ``capacity_factor=`` or ``telemetry=`` opts out of the
+    planner loop, exactly like the replicated path.
+
+    Returns ``(y, aux, counts)`` with mesh-global per-expert ``counts``.
+    """
+    T, _ = x.shape
+    n_dev = 1
+    for a in axes:
+        n_dev *= mesh.shape[a]
+    if T % n_dev:
+        raise ValueError(f"tokens {T} must divide the {n_dev}-device mesh")
+    t_loc = T // n_dev                     # per-sender token slice
+    m = t_loc * cfg.top_k                  # per-sender assignments
+    if capacity_factor is None and telemetry is None:
+        from repro.engine.planner import default_planner
+
+        planner = planner or default_planner()
+        key = moe_plan_key(T, cfg, x.dtype, mesh)
+        capacity_factor = planner.capacity_factor_for(
+            key, default=cfg.capacity_factor
+        )
+        telemetry = planner.exchange_recorder(key, default=cfg.capacity_factor)
+    elif capacity_factor is None:
+        capacity_factor = cfg.capacity_factor
+    cap = expert_capacity(t_loc, cfg.top_k, cfg.n_experts, capacity_factor)
+    ccfg = cfg._replace(capacity_factor=0.0)
+
+    attempt_drops = []
+
+    def run_fn(fn):
+        out, aux, dropped, counts, peak, overflow = fn(p, x)
+        attempt_drops.append(int(dropped))
+        return out, aux, counts, peak, overflow
+
+    report = _drop_report(telemetry, attempt_drops)
+
+    (y, aux), counts = run_with_capacity_retries(
+        lambda c: _compiled_moe_local(ccfg, c, mesh, tuple(axes), ep_axis),
+        run_fn,
+        m=m,
+        part_buckets=max(cfg.n_experts, 1),
+        cap=cap,
+        max_retries=max_retries,
+        telemetry=report,
+        lru=_compiled_moe_local,
+        label="moe_apply_local_adaptive",
+        strict=False,
+    )
+    return y, aux, counts
+
+
+def moe_shard_specs(
+    params: Params,
+    mesh_axes=("pod", "data", "model"),
+    ep_axis="model",
+    *,
+    with_stats: bool = False,
+):
     """PartitionSpecs for calling moe_apply_local under shard_map.
 
     Tokens shard over every mesh axis; experts over the EP axis; router
-    replicated. Returns (in_specs for (params, x), out_specs).
+    replicated. Returns (in_specs for (params, x), out_specs) — the
+    out_specs match ``moe_apply_local``'s 3-tuple, or its 6-tuple stats
+    contract when ``with_stats`` (aux/dropped/counts/peak/overflow all
+    replicated).
     """
     from jax.sharding import PartitionSpec as P
 
@@ -423,5 +568,6 @@ def moe_shard_specs(params: Params, mesh_axes=("pod", "data", "model"), ep_axis=
         lambda kp, _: leaf_spec(tuple(k.key for k in kp)), params
     )
     x_spec = P(tuple(mesh_axes))
-    out_specs = (P(tuple(mesh_axes)), P(), P())
+    n_out = 6 if with_stats else 3
+    out_specs = (P(tuple(mesh_axes)),) + (P(),) * (n_out - 1)
     return (p_spec, x_spec), out_specs

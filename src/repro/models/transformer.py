@@ -313,8 +313,21 @@ class ShardCtx:
 
 
 def _apply_ffn(
-    p: Params, cfg: ModelConfig, x: jax.Array, ctx: ShardCtx, stats: dict, *, decode=False
+    p: Params,
+    cfg: ModelConfig,
+    x: jax.Array,
+    ctx: ShardCtx,
+    stats: dict,
+    *,
+    decode=False,
+    moe_capacity: Optional[int] = None,
+    moe_stats: bool = False,
 ):
+    """``moe_capacity`` overrides the per-(sender, expert) token capacity
+    (static — the train loop's capacity controller threads the learned value
+    through here, so a bump recompiles once).  ``moe_stats=True`` adds
+    ``moe_dropped``/``moe_peak`` to the stats dict — the exchange-telemetry
+    signal the between-step learner and AnomalyMonitor read."""
     h = rmsnorm(p["norm2"], x)
     if "ffn" in p:
         return x + mlp(p["ffn"], h), stats
@@ -327,8 +340,16 @@ def _apply_ffn(
         h = ctx.constrain_spec(h, "batch", ctx.ep_axis, None)
     flat = h.reshape(B * S, D)
     mcfg = cfg.moe_cfg()
+    dropped = peak = None
     if ctx.mesh is None:
-        y, aux, overflow = moe_apply_ep_replicated(p["moe"], mcfg, flat)
+        if moe_stats:
+            y, aux, dropped, _, peak, overflow = moe_apply_ep_replicated(
+                p["moe"], mcfg, flat, capacity=moe_capacity, with_stats=True
+            )
+        else:
+            y, aux, overflow = moe_apply_ep_replicated(
+                p["moe"], mcfg, flat, capacity=moe_capacity
+            )
     elif decode:
         # decode: tokens replicated over EP axis, psum-combined (moe.py doc).
         # Tiny decode batches may not divide the data axes (long_500k B=1):
@@ -360,31 +381,55 @@ def _apply_ffn(
     else:
         # train/prefill: the paper's model-D all_to_all dispatch
         (p_spec, x_spec), out_specs = moe_shard_specs(
-            p["moe"], mesh_axes=ctx.axes, ep_axis=ctx.ep_axis
+            p["moe"], mesh_axes=ctx.axes, ep_axis=ctx.ep_axis, with_stats=moe_stats
         )
 
         def body(mp, xt):
-            return moe_apply_local(mp, mcfg, xt, ctx.ep_axis, ctx.axes)
+            res = moe_apply_local(
+                mp, mcfg, xt, ctx.ep_axis, ctx.axes,
+                capacity=moe_capacity, with_stats=moe_stats,
+            )
+            if not moe_stats:
+                return res
+            out, aux, dropped, counts, peak, overflow = res
+            rest = tuple(a for a in ctx.axes if a != ctx.ep_axis)
+            if rest:  # stats are EP-group-global; fold in the other axes
+                dropped = jax.lax.psum(dropped, rest)
+                counts = jax.lax.psum(counts, rest)
+                peak = jax.lax.pmax(peak, rest)
+            return out, aux, dropped, counts, peak, overflow
 
-        y, aux, overflow = jax.shard_map(
+        res = jax.shard_map(
             body,
             mesh=ctx.mesh,
             in_specs=(p_spec, x_spec),
             out_specs=out_specs,
             check_vma=False,
         )(p["moe"], flat)
+        if moe_stats:
+            y, aux, dropped, _, peak, overflow = res
+        else:
+            y, aux, overflow = res
     stats = dict(stats)
     stats["moe_aux"] = stats.get("moe_aux", 0.0) + aux
     stats["moe_overflow"] = jnp.logical_or(
         stats.get("moe_overflow", jnp.asarray(False)), overflow
     )
+    if moe_stats:
+        # layer totals: tokens lost this step sum over layers, the hottest
+        # per-(sender, expert) count maxes — what the capacity learner reads
+        stats["moe_dropped"] = stats.get("moe_dropped", 0) + dropped
+        stats["moe_peak"] = jnp.maximum(stats.get("moe_peak", 0), peak)
     y = y.reshape(B, S, D)
     if ctx.mesh is not None and not decode:
         y = ctx.constrain_spec(y, "batch", ctx.ep_axis, None)
     return x + y, stats
 
 
-def _apply_block(p: Params, cfg: ModelConfig, kind: str, ffn, x, ctx, stats):
+def _apply_block(
+    p: Params, cfg: ModelConfig, kind: str, ffn, x, ctx, stats,
+    *, moe_capacity: Optional[int] = None, moe_stats: bool = False,
+):
     h = rmsnorm(p["norm1"], x)
     pin = ctx.constrain_spec if ctx.mesh is not None else None
     if kind.startswith("attn"):
@@ -396,7 +441,9 @@ def _apply_block(p: Params, cfg: ModelConfig, kind: str, ffn, x, ctx, stats):
     else:
         x = x + mamba_train(p["mamba"], cfg.mamba_cfg(), h, constrain=pin)
     if ffn is not None:
-        x, stats = _apply_ffn(p, cfg, x, ctx, stats)
+        x, stats = _apply_ffn(
+            p, cfg, x, ctx, stats, moe_capacity=moe_capacity, moe_stats=moe_stats
+        )
     return x, stats
 
 

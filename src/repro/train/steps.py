@@ -82,8 +82,20 @@ def chunked_ce_loss(
     return tot / jnp.maximum(cnt, 1)
 
 
-def _hidden_states(params, cfg: ModelConfig, tokens, frontend_embeds, ctx, remat):
-    """Run the stack up to final norm, returning hidden states + stats."""
+def _hidden_states(
+    params, cfg: ModelConfig, tokens, frontend_embeds, ctx, remat,
+    moe_capacity=None,
+):
+    """Run the stack up to final norm, returning hidden states + stats.
+
+    The stats dict always carries ``moe_dropped`` (tokens lost to capacity
+    overflow, summed over layers) and ``moe_peak`` (hottest per-(sender,
+    expert) token count, maxed over layers) alongside ``moe_aux`` /
+    ``moe_overflow`` — the telemetry the between-step capacity learner and
+    ``AnomalyMonitor`` read.  ``moe_capacity`` (static) overrides every MoE
+    layer's per-(sender, expert) capacity: the train driver threads the
+    learned value through here, so a capacity bump recompiles the step once.
+    """
     from repro.models.transformer import _apply_block, embed_tokens
 
     x = embed_tokens(params["embed"], tokens, cfg, ctx)
@@ -92,14 +104,26 @@ def _hidden_states(params, cfg: ModelConfig, tokens, frontend_embeds, ctx, remat
         x = jnp.concatenate([frontend_embeds.astype(x.dtype), x[:, F:]], axis=1)
     aux0 = jnp.zeros((), jnp.float32)
     ovf0 = jnp.asarray(False)
+    drop0 = jnp.zeros((), jnp.int32)
+    peak0 = jnp.zeros((), jnp.int32)
 
     def group_body(carry, gp):
-        x, aux, ovf = carry
+        x, aux, ovf, drp, pk = carry
         x = ctx.constrain_batch(x)  # anchor the scan carry's batch sharding
-        stats = {"moe_aux": aux, "moe_overflow": ovf}
+        stats = {
+            "moe_aux": aux, "moe_overflow": ovf,
+            "moe_dropped": drp, "moe_peak": pk,
+        }
         for i, (kind, ffn) in enumerate(zip(cfg.pattern, cfg.ffn_pattern)):
-            x, stats = _apply_block(gp[f"pos{i}"], cfg, kind, ffn, x, ctx, stats)
-        return (x, stats["moe_aux"], stats["moe_overflow"]), None
+            x, stats = _apply_block(
+                gp[f"pos{i}"], cfg, kind, ffn, x, ctx, stats,
+                moe_capacity=moe_capacity, moe_stats=True,
+            )
+        return (
+            x, stats["moe_aux"], stats["moe_overflow"],
+            jnp.asarray(stats["moe_dropped"], jnp.int32),
+            jnp.asarray(stats["moe_peak"], jnp.int32),
+        ), None
 
     body = group_body
     if remat:
@@ -109,9 +133,16 @@ def _hidden_states(params, cfg: ModelConfig, tokens, frontend_embeds, ctx, remat
             else None  # "none": recompute everything per group (the giants)
         )
         body = jax.checkpoint(group_body, policy=policy)
-    (x, aux, ovf), _ = jax.lax.scan(body, (x, aux0, ovf0), params["blocks"])
+    (x, aux, ovf, drp, pk), _ = jax.lax.scan(
+        body, (x, aux0, ovf0, drop0, peak0), params["blocks"]
+    )
     x = rmsnorm(params["final_norm"], x)
-    return x, {"moe_aux": aux / max(cfg.n_layers, 1), "moe_overflow": ovf}
+    return x, {
+        "moe_aux": aux / max(cfg.n_layers, 1),
+        "moe_overflow": ovf,
+        "moe_dropped": drp,
+        "moe_peak": pk,
+    }
 
 
 def loss_fn(
@@ -123,9 +154,11 @@ def loss_fn(
     aux_weight: float = 0.01,
     loss_chunk: int = 512,
     remat: bool = True,
+    moe_capacity: Optional[int] = None,
 ):
     x, stats = _hidden_states(
-        params, cfg, batch["tokens"], batch.get("frontend_embeds"), ctx, remat
+        params, cfg, batch["tokens"], batch.get("frontend_embeds"), ctx, remat,
+        moe_capacity,
     )
     ce = chunked_ce_loss(x, params["embed"], batch["labels"], cfg, ctx, chunk=loss_chunk)
     loss = ce + aux_weight * stats["moe_aux"]
@@ -143,13 +176,22 @@ def train_step(
     n_microbatch: int = 1,
     loss_chunk: int = 512,
     remat: bool = True,
+    moe_capacity: Optional[int] = None,
 ):
-    """One optimizer step (optionally accumulating over microbatches)."""
+    """One optimizer step (optionally accumulating over microbatches).
+
+    ``moe_capacity`` (static) pins every MoE layer's per-(sender, expert)
+    capacity — the train driver's capacity controller passes the learned
+    value so a bump recompiles the step exactly once, like the serving path.
+    The returned metrics carry ``moe_dropped``/``moe_peak`` (summed / maxed
+    over microbatches) for the controller to fold back into the planner.
+    """
 
     def grads_of(b):
         (loss, stats), grads = jax.value_and_grad(
             lambda p: loss_fn(
-                p, cfg, b, ctx=ctx, loss_chunk=loss_chunk, remat=remat
+                p, cfg, b, ctx=ctx, loss_chunk=loss_chunk, remat=remat,
+                moe_capacity=moe_capacity,
             ),
             has_aux=True,
         )(params)
@@ -177,7 +219,12 @@ def train_step(
         # device (108 GiB on jamba; refuted hypothesis H-acc, EXPERIMENTS §Perf)
         zero_g = jax.tree.map(lambda p: (p * 0).astype(jnp.float32), params)
         (loss, grads), stats_seq = jax.lax.scan(acc_body, (jnp.zeros(()), zero_g), micro)
-        stats = jax.tree.map(lambda s: s[-1], stats_seq)
+        # drops accumulate across microbatches, peak is the step's hottest
+        # count; everything else keeps last-microbatch semantics
+        reduce = {"moe_dropped": jnp.sum, "moe_peak": jnp.max}
+        stats = {
+            k: reduce[k](s) if k in reduce else s[-1] for k, s in stats_seq.items()
+        }
 
     new_params, new_opt, metrics = apply_updates(params, grads, opt_state, opt_cfg)
     metrics = {**metrics, "loss": loss, **{k: v for k, v in stats.items()}}

@@ -316,6 +316,110 @@ def skew_promotion_body(ctx):
     }
 
 
+# ------------------------------------------------- expert-parallel training ---
+def moe_train_step_body(ctx):
+    """The between-step MoE capacity loop on a real expert-parallel mesh.
+
+    Runs ``train_step`` for a tiny skewed MoE LM on a 2-D (data=2, model=2)
+    mesh spanning every device in the job, with the
+    ``MoECapacityController`` reading/writing a shared plan-cache file.
+    Parameter updates are discarded between steps so the routing — and with
+    it the integer dropped/peak trace and the learned factor — is a
+    deterministic function of ``ctx.args`` alone: the same trace must come
+    out of a 2-process x 2-device run, a 4-process x 1-device run, and the
+    single-process forced mesh (only the plan cell's topology fingerprint
+    may differ).  Float loss is *not* bit-comparable across topologies
+    (reduction order); it is only checked finite.
+    """
+    import functools
+    from dataclasses import replace
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.configs.base import ARCHS
+    from repro.engine.planner import Planner
+    from repro.models.moe import collapse_router
+    from repro.models.transformer import ShardCtx, model_init
+    from repro.optim.adamw import OptConfig, init_opt_state
+    from repro.train.adaptive import MoECapacityController
+    from repro.train.steps import train_step
+
+    a = ctx.args
+    steps = a.get("steps", 2)
+    cfg = replace(
+        ARCHS["qwen3-0.6b"], name="moe-mh-tiny",
+        n_layers=1, d_model=32, n_heads=2, n_kv_heads=2, head_dim=16,
+        d_ff=32, vocab_size=64, kv_chunk=16,
+        pattern=("attn",), ffn_pattern=("moe",),
+        n_experts=8, top_k=2, capacity_factor=1.0,
+        param_dtype=jnp.float32, compute_dtype=jnp.float32,
+    )
+    mesh = jax.make_mesh((2, 2), ("data", "model"))
+    tctx = ShardCtx(mesh=mesh, axes=("data", "model"))
+
+    # init on the local device, then replicate the host values over the
+    # global mesh — every rank computes the identical tree from the seed
+    def replicate(tree):
+        return jax.tree.map(
+            lambda v: jax.device_put(
+                np.asarray(v), NamedSharding(mesh, P())
+            ),
+            tree,
+        )
+
+    params = model_init(jax.random.PRNGKey(0), cfg, ep_shards=tctx.ep_shards)
+    params["blocks"] = {
+        pos: ({**gp, "moe": collapse_router(gp["moe"], 6.0)} if "moe" in gp else gp)
+        for pos, gp in params["blocks"].items()
+    }
+    params = replicate(params)
+    ocfg = OptConfig(peak_lr=1e-4, warmup_steps=2, total_steps=max(steps, 2))
+    opt = init_opt_state(params, ocfg)
+
+    planner = Planner(a["plans_path"], learned_scope=a.get("scope", "global"))
+    batch_sz, seq = 4, 16                 # T = 64 tokens over 4 devices
+    ctl = MoECapacityController(
+        cfg.moe_cfg(), tokens=batch_sz * seq, ctx=tctx,
+        planner=planner, dtype=cfg.compute_dtype,
+    )
+
+    @functools.lru_cache(maxsize=None)
+    def step_fn(cap):
+        return jax.jit(functools.partial(
+            train_step, cfg=cfg, opt_cfg=ocfg, ctx=tctx,
+            n_microbatch=1, loss_chunk=seq, moe_capacity=cap))
+
+    rng = np.random.default_rng(a.get("seed", 0))
+    trace = []
+    losses_finite = True
+    for _ in range(steps):
+        tok = rng.integers(1, cfg.vocab_size, (batch_sz, seq + 1)).astype(np.int32)
+        batch = replicate({"tokens": tok[:, :-1], "labels": tok[:, 1:]})
+        cap = ctl.capacity
+        _, _, m = step_fn(cap)(params, opt, batch)  # updates discarded (see docstring)
+        m = {k: float(v) if jnp.ndim(v) == 0 else v for k, v in m.items()}
+        ctl.observe(m, capacity=cap)
+        trace.append(
+            {"cap": cap, "dropped": int(m["moe_dropped"]), "peak": int(m["moe_peak"])}
+        )
+        losses_finite = losses_finite and bool(np.isfinite(m["loss"]))
+    planner.save()
+
+    factor = ctl.factor
+    assert factor > cfg.moe_cfg().capacity_factor, "skew must raise the factor"
+    return {
+        "processes": jax.process_count(),
+        "plan_key": ctl.key,
+        "scoped_key": planner.scoped_key(ctl.key),
+        "learned_factor": factor,
+        "trace": trace,
+        "losses_finite": losses_finite,
+    }
+
+
 # --------------------------------------------------------- failure injection ---
 def crash_body(ctx):
     """The victim rank dies hard mid-test; survivors sit in a long wait.

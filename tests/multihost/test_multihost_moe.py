@@ -30,7 +30,7 @@ def test_moe_adaptive_learns_into_shared_plan_file(tmp_path):
 
     with open(plans_path) as f:
         doc = json.load(f)
-    assert doc["version"] == 2
+    assert doc["version"] == 3
     # one merged entry — two concurrent writers, zero clobbering
     assert sorted(doc["learned"]) == [r0["plan_key"]]
     entry = doc["learned"][r0["plan_key"]]
@@ -56,3 +56,62 @@ def test_moe_adaptive_bit_identical_to_single_process(tmp_path):
     # ...but the learned cells live under different topology fingerprints
     assert m["plan_key"] != f["plan_key"]
     assert "/procs2x1" in m["plan_key"]
+
+
+# ------------------------------------------------- expert-parallel training ---
+def _check_trained_cell(plans_path, report):
+    """The body's learned factor must be durable in the shared file."""
+    with open(plans_path) as f:
+        doc = json.load(f)
+    assert doc["version"] == 3
+    entry = doc["learned"][report["plan_key"]]
+    assert entry["capacity_factor"] == report["learned_factor"]
+    assert entry["observations"] >= 1
+
+
+def test_moe_train_step_learns_on_two_process_mesh(tmp_path):
+    """The between-step capacity loop on a 2-process x 2-device (data=2,
+    model=2) mesh: every rank sees the same integer dropped/peak trace,
+    step 0 pays the overflow, step 1 runs drop-free at the learned
+    capacity, and the factor lands in the shared plan file under the
+    2x2-process cell."""
+    plans_path = os.path.join(str(tmp_path), "plans.json")
+    run = harness.run_multihost(
+        "bodies.py:moe_train_step_body", 2, local_devices=2,
+        args={"plans_path": plans_path},
+    ).require_success()
+    r0, r1 = run.results()
+    assert r0["trace"] == r1["trace"]
+    assert r0["learned_factor"] == r1["learned_factor"] > 1.0
+    assert r0["plan_key"] == r1["plan_key"]
+    assert "/procs2x2" in r0["plan_key"]
+    assert r0["trace"][0]["dropped"] > 0, "collapsed router must overflow step 0"
+    assert all(t["dropped"] == 0 for t in r0["trace"][1:]), r0["trace"]
+    assert r0["trace"][0]["cap"] < r0["trace"][1]["cap"]
+    assert r0["losses_finite"] and r1["losses_finite"]
+    _check_trained_cell(plans_path, r0)
+
+
+def test_moe_train_step_bit_identical_across_topologies(tmp_path):
+    """The same 4-device training job as 4 processes x 1 device and as the
+    single-process forced mesh: the learned factor and the whole integer
+    capacity trace must be bit-identical (only the plan cell's topology
+    fingerprint differs) — the acceptance bar for trusting factors learned
+    on one topology shape from another run of the same shape."""
+    four_path = os.path.join(str(tmp_path), "four.json")
+    ref_path = os.path.join(str(tmp_path), "ref.json")
+    four = harness.run_multihost(
+        "bodies.py:moe_train_step_body", 4, local_devices=1,
+        args={"plans_path": four_path},
+    ).require_success()
+    ref = harness.run_forced_mesh(
+        "bodies.py:moe_train_step_body", 4, args={"plans_path": ref_path}
+    ).require_success()
+    m, f = four.result(), ref.result()
+    assert m["trace"] == f["trace"], "integer capacity trace must not depend on process count"
+    assert m["learned_factor"] == f["learned_factor"]
+    assert m["plan_key"] != f["plan_key"]
+    assert "/procs4x1" in m["plan_key"]
+    assert "procs" not in f["plan_key"]
+    _check_trained_cell(four_path, m)
+    _check_trained_cell(ref_path, f)

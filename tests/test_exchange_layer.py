@@ -28,10 +28,10 @@ settings.register_profile("repro-ci", max_examples=10, deadline=None,
                           derandomize=True)
 settings.load_profile("repro-ci")
 
-ms = st.integers(1, 1 << 14)
+ms = st.integers(0, 1 << 14)   # 0 = a drained sender (empty shard/microbatch)
 buckets = st.integers(1, 64)
 cfs = st.floats(0.05, 64.0)
-Ts = st.integers(1, 1 << 10)
+Ts = st.integers(0, 1 << 10)   # 0 = an empty token batch
 ks = st.integers(1, 4)
 Es = st.integers(1, 64)
 
@@ -42,7 +42,7 @@ def test_slab_capacity_bounds_and_monotonicity(m, b, cf):
     """THE capacity formula: within [1, m] always, monotone in the factor,
     and >= a uniform sender's per-bucket load whenever cf >= 1."""
     cap = slab_capacity(m, b, cf)
-    assert 1 <= cap <= m
+    assert 1 <= cap <= max(m, 1)   # m=0: the 1-slot floor beats the m bound
     assert slab_capacity(m, b, cf * 2) >= cap
     if cf >= 1.0:
         assert cap * b >= m
@@ -64,8 +64,17 @@ def test_expert_capacity_is_keyed_slab_capacity(T, k, E, cf):
     [1, m] clamp, same monotonicity."""
     cap = expert_capacity(T, k, E, cf)
     assert cap == slab_capacity(T * k, E, cf)
-    assert 1 <= cap <= T * k
+    assert 1 <= cap <= max(T * k, 1)
     assert expert_capacity(T, k, E, cf * 2) >= cap
+
+
+def test_expert_capacity_never_zero():
+    """Regression: an empty shard/microbatch used to get a zero-capacity
+    slab (min(m, ...) with m=0), which the retry driver doubles forever —
+    0*2 is still 0 — until retries exhaust.  The floor must win."""
+    assert expert_capacity(0, 2, 8, 1.25) == 1
+    assert slab_capacity(0, 8, 1.25) == 1
+    assert slab_geometry("splitters", 0, 8, 1.5)[2] == 1
 
 
 def test_slab_valid_masks_per_shard_prefixes():

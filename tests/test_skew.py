@@ -325,6 +325,23 @@ def test_promotion_strikes_policy():
     assert lrn.should_promote(3)
 
 
+def test_empty_observation_does_not_reset_strikes():
+    """Regression: an m=0 observation (idle tick / drained shard) has
+    peak_mean_ratio 0.0 by construction, which used to read as "calm" and
+    reset the strike counter for a genuinely skewed cell.  The sequence
+    [skew, empty, skew, skew] must still promote."""
+    lrn = CapacityLearner()
+    empty = _obs(0.0, partition="radix", m=0)
+    assert empty.m == 0 and empty.peak_mean_ratio() == 0.0
+    s = 0
+    for o in [_obs(4.0, partition="radix"), empty,
+              _obs(4.0, partition="radix"), _obs(4.0, partition="radix")]:
+        s = lrn.promotion_strikes(s, o)
+    assert s == 3 and lrn.should_promote(s)
+    # a genuinely calm radix observation still resets
+    assert lrn.promotion_strikes(s, _obs(1.1, partition="radix")) == 0
+
+
 def test_planner_latches_promotion_and_lowers_the_floor(tmp_path):
     p = Planner(str(tmp_path / "plans.json"))
     key = plan_key(4096, jnp.int32)

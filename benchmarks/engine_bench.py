@@ -25,6 +25,13 @@ pay overflow retries with peak/mean bucket ratios far above 2, sample rows
 hold ratio ~1 with zero retries at the same capacity — the skew story
 tests/test_skew.py asserts, with wall-clock attached.
 
+The off-default ``gloo`` section (``--sections gloo``) answers the question
+the forced mesh cannot: what does the real wire cost?  It runs one timing
+body twice through the multihost harness — 2 genuine ``jax.distributed``
+processes exchanging over gloo vs the single-process forced 2-device mesh —
+and reports the cluster strategy's ``wire_cost`` ratio plus the
+cluster-vs-shared crossover under both topologies.
+
 The ``frontend`` section benches the multi-tenant SLO front door
 (``repro.engine.frontend``): warm-vs-cold wall-clock replay (what AOT
 ``warmup`` buys on first-request latency and SLO goodput) and two
@@ -323,6 +330,55 @@ def skew_rows(rng, mesh, *, reps: int, smoke: bool):
     return rows
 
 
+def gloo_rows(*, reps: int, smoke: bool):
+    """Real-wire section (off by default: ``--sections gloo``).
+
+    Runs the same timing body twice — once under 2 real ``jax.distributed``
+    processes exchanging over gloo, once on the single-process forced
+    2-device mesh every other section uses — via the multihost test harness.
+    The shared row is pure local compute and should cost the same either
+    way; the cluster row pays genuine inter-process message passing only in
+    the gloo run, so its ``wire_cost`` ratio is the real collective tax the
+    forced mesh hides.  Spawns subprocesses: slower than the in-process
+    sections, and not part of the default or smoke sweeps.
+    """
+    mh_dir = os.path.abspath(os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        "tests", "multihost",
+    ))
+    sys.path.insert(0, mh_dir)
+    try:
+        import harness
+    finally:
+        sys.path.remove(mh_dir)
+
+    n = 1 << 12 if smoke else 1 << 14
+    body_args = {"n": n, "reps": reps, "seed": 0}
+    spec = "bodies.py:gloo_timing_body"
+    gloo = harness.run_multihost(spec, 2, args=body_args)
+    gloo.require_success()
+    forced = harness.run_forced_mesh(spec, 2, args=body_args)
+    forced.require_success()
+    g = gloo.reports[0].result      # max-over-ranks: identical on every rank
+    f = forced.reports[0].result
+
+    rows = []
+    for name in ("shared", "cluster"):
+        wire = g[name] / f[name] if f[name] > 0 else float("inf")
+        rows.append((
+            f"engine/gloo_{name}/n={n}",
+            g[name],
+            f"forced_us={f[name]:.1f};wire_cost={wire:.2f}x",
+        ))
+    rows.append((
+        f"engine/gloo_crossover/n={n}",
+        g["cluster"],
+        f"cluster_vs_shared_gloo={g['cluster'] / g['shared']:.2f}x;"
+        f"cluster_vs_shared_forced={f['cluster'] / f['shared']:.2f}x",
+    ))
+    return rows
+
+
 def parse_derived(derived: str) -> dict:
     """``k=v;k=v`` derived column -> dict (floats where they parse)."""
     out = {}
@@ -401,7 +457,8 @@ def main(argv=None):
     ap.add_argument("--reps", type=int, default=0, help="0 = auto")
     ap.add_argument("--plans", default="", help="persist tuned plans to this JSON")
     ap.add_argument("--sections", default="crossover,serving,moe,frontend,skew",
-                    help="comma-separated row groups to run")
+                    help="comma-separated row groups to run (off-default "
+                         "extra: 'gloo' — real 2-process wire-cost rows)")
     ap.add_argument("--snapshot", default="",
                     help="write rows to this BENCH_*.json")
     ap.add_argument("--compare", default="",
@@ -479,6 +536,8 @@ def main(argv=None):
         rows += frontend_rows(rng, reps=max(reps, 2), smoke=args.smoke)
     if "skew" in sections:
         rows += skew_rows(rng, mesh, reps=max(reps, 2), smoke=args.smoke)
+    if "gloo" in sections:
+        rows += gloo_rows(reps=max(reps, 2), smoke=args.smoke)
 
     if args.plans:
         planner.save()

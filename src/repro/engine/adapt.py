@@ -98,6 +98,12 @@ class LearnedCapacity:
     #                                  follow the plan's own mode)
     skew_strikes: int = 0    # consecutive high-skew radix observations —
     #                          the promotion counter (resets on a calm call)
+    calm_streak: int = 0     # consecutive calm sample-era observations on a
+    #                          promoted cell — the slow probation counter
+    #                          that eventually demotes it back to radix
+    demotions: int = 0       # how many times this cell has been demoted —
+    #                          a generation counter that makes demotion
+    #                          survive merges with stale promoted entries
 
     def to_dict(self) -> dict:
         return asdict(self)
@@ -110,6 +116,8 @@ class LearnedCapacity:
             observations=int(d.get("observations", 0)),
             partition=d.get("partition"),
             skew_strikes=int(d.get("skew_strikes", 0)),
+            calm_streak=int(d.get("calm_streak", 0)),
+            demotions=int(d.get("demotions", 0)),
         )
 
     def merge(self, other: "LearnedCapacity") -> "LearnedCapacity":
@@ -126,25 +134,35 @@ class LearnedCapacity:
         the expensive error.  ``peak_factor`` is a lifetime max by
         definition, and ``observations`` takes max rather than sum because
         concurrent counts share lineage through the persisted file — summing
-        would double-count on every merge.  ``partition`` is a monotone
-        latch (``None < "radix" < "sample"``): once any writer promoted the
-        cell to the sample partition, the merge keeps it promoted — a
-        concurrent writer that hasn't seen the skew yet can't demote it.
-        ``skew_strikes`` takes max for the same shared-lineage reason as
-        ``observations``.  All components are commutative, associative, and
-        idempotent, so any interleaving of rank saves converges to the same
-        entry (property-tested in tests/test_plan_cache_concurrency.py).
+        would double-count on every merge.  The partition state merges as a
+        lexicographic max on ``(demotions, partition rank)`` where rank is
+        ``None < "radix" < "sample"``: *within one demotion generation* the
+        promotion latch is monotone — a concurrent writer that hasn't seen
+        the skew yet can't demote a promoted cell — while an explicit
+        calm-streak demotion bumps ``demotions`` and therefore wins over
+        every stale promoted entry from the previous generation (a laggard
+        writer re-saving its old ``partition="sample"`` cannot flap a
+        demoted cell back).  ``skew_strikes``/``calm_streak`` take max for
+        the same shared-lineage reason as ``observations``.  All components
+        are commutative, associative, and idempotent, so any interleaving of
+        rank saves converges to the same entry (property-tested in
+        tests/test_plan_cache_concurrency.py).
 
         >>> LearnedCapacity(3.0, 2.5, 4).merge(LearnedCapacity(2.0, 3.0, 9))
         ... # doctest: +NORMALIZE_WHITESPACE
         LearnedCapacity(capacity_factor=2.0, peak_factor=3.0, observations=9,
-                        partition=None, skew_strikes=0)
+                        partition=None, skew_strikes=0, calm_streak=0,
+                        demotions=0)
         >>> e = LearnedCapacity(3.0, 2.5, 9).merge(LearnedCapacity(2.0, 3.0, 9))
         >>> e.capacity_factor                    # tie on observations: higher
         3.0
         >>> LearnedCapacity(2.0, 2.0, 1, partition="sample").merge(
         ...     LearnedCapacity(9.0, 9.0, 9)).partition   # promotion latches
         'sample'
+        >>> LearnedCapacity(2.0, 2.0, 9, demotions=1).merge(   # a demotion
+        ...     LearnedCapacity(2.0, 2.0, 1, partition="sample")   # is a newer
+        ... ).partition is None          # generation: stale promotion loses
+        True
         """
         a, b = (self.observations, self.capacity_factor), (
             other.observations,
@@ -152,13 +170,24 @@ class LearnedCapacity:
         )
         win = self if a >= b else other
         rank = {None: 0, "radix": 1, "sample": 2}
-        part = max(self.partition, other.partition, key=lambda p: rank.get(p, 0))
+        ps = (self.demotions, rank.get(self.partition, 0))
+        po = (other.demotions, rank.get(other.partition, 0))
+        if ps == po:  # same generation + family: counters share lineage
+            part, demotions = self.partition, self.demotions
+            strikes = max(self.skew_strikes, other.skew_strikes)
+            calm = max(self.calm_streak, other.calm_streak)
+        else:  # newer generation (or higher latch within it) wins outright
+            src = self if ps > po else other
+            part, demotions = src.partition, src.demotions
+            strikes, calm = src.skew_strikes, src.calm_streak
         return LearnedCapacity(
             capacity_factor=win.capacity_factor,
             peak_factor=max(self.peak_factor, other.peak_factor),
             observations=max(self.observations, other.observations),
             partition=part,
-            skew_strikes=max(self.skew_strikes, other.skew_strikes),
+            skew_strikes=strikes,
+            calm_streak=calm,
+            demotions=demotions,
         )
 
 
@@ -209,6 +238,16 @@ class CapacityLearner:
     True
     >>> lrn.promotion_strikes(2, calm)               # untagged: unchanged
     2
+
+    **Probation / demotion** (sample -> radix, slowly).  Promotion is no
+    longer a one-way latch: ``calm_streak`` counts consecutive calm
+    sample-era observations on a promoted cell, and once the streak
+    outlasts ``demote_threshold`` (``demote_after`` doubled per prior
+    demotion) the planner demotes the cell back to its radix-family plan —
+    with the ``demotions`` generation counter bumped so the decision
+    survives merges with stale promoted entries (see
+    ``LearnedCapacity.merge``).  If the skew returns during probation, the
+    normal three-strike promotion re-latches, now one generation up.
     """
 
     margin: float = 1.25
@@ -217,6 +256,8 @@ class CapacityLearner:
     snap_eps: float = 1e-3
     promote_ratio: float = 2.0
     promote_after: int = 3
+    demote_ratio: float = 1.5
+    demote_after: int = 32
 
     def target(self, obs: ExchangeObservation, *, default: float) -> float:
         """observed requirement x margin, clamped to [default, max_factor]."""
@@ -267,6 +308,60 @@ class CapacityLearner:
     def should_promote(self, strikes: int) -> bool:
         """True once the strike counter reaches ``promote_after``."""
         return strikes >= self.promote_after
+
+    def calm_streak(self, streak: int, obs: ExchangeObservation) -> int:
+        """Fold one observation into the slow probation counter.
+
+        The promotion latch used to be one-way by design: once a cell ran
+        the sample partition, nothing could ever send it back to the faster
+        radix family even if the skew that caused the promotion vanished.
+        The probation counter is the way back: *consecutive* calm
+        sample-partition observations (peak/mean at or below
+        ``demote_ratio``, no overflow) accrue; an overflowing or skewed
+        sample call resets to zero (the distribution is still rough).
+        Radix, untagged (MoE), and empty (``m == 0``) observations pass the
+        counter through unchanged — they say nothing about the promoted
+        cell's calm.
+
+        >>> lrn = CapacityLearner()
+        >>> calm = ExchangeObservation(m=128, part_buckets=8, capacity=32,
+        ...     peak=16, overflowed=False, retries=0, partition="sample")
+        >>> lrn.calm_streak(4, calm)
+        5
+        >>> rough = ExchangeObservation(m=128, part_buckets=8, capacity=32,
+        ...     peak=48, overflowed=True, retries=1, partition="sample")
+        >>> lrn.calm_streak(4, rough)
+        0
+        >>> lrn.calm_streak(4, ExchangeObservation(m=0, part_buckets=8,
+        ...     capacity=1, peak=0, overflowed=False, retries=0,
+        ...     partition="sample"))                  # idle tick: no evidence
+        4
+        """
+        if obs.partition != "sample" or obs.m == 0:
+            return streak
+        if obs.peak_mean_ratio() <= self.demote_ratio and not obs.overflowed:
+            return streak + 1
+        return 0
+
+    def demote_threshold(self, demotions: int = 0) -> int:
+        """Calm observations required before the next demotion.
+
+        Doubles with every demotion the cell has already been through
+        (capped at 2^16): a cell whose skew keeps coming back spends
+        exponentially longer on the sample partition before each new
+        probation attempt — the counter is *slow* by design, so promotion
+        and demotion can never flap call-to-call.
+
+        >>> lrn = CapacityLearner()
+        >>> (lrn.demote_threshold(0), lrn.demote_threshold(2))
+        (32, 128)
+        """
+        return self.demote_after * (2 ** min(demotions, 16))
+
+    def should_demote(self, streak: int, demotions: int = 0) -> bool:
+        """True once the calm streak has outlasted this generation's
+        probation threshold."""
+        return streak >= self.demote_threshold(demotions)
 
 
 class DelayController:

@@ -27,13 +27,24 @@ slabs right on its first compile.  Schema v3 adds the partition policy:
 ``SortPlan.partition`` pins a plan's partition family, and the learned
 entries carry the skew-promotion latch (``partition``/``skew_strikes``) the
 ``CapacityLearner`` flips when a radix-partitioned cell's peak/mean bucket
-ratio stays high — see docs/plan-cache.md.  Version-1 and -2 files load
-fine — they simply carry no learned state / no partition policy.  Cells are
-keyed by any string the reporting path binds: sort cells use
+ratio stays high — plus the probation counters (``calm_streak``/
+``demotions``, additive within v3) that let a promoted cell demote back to
+radix after a long calm stretch — see docs/plan-cache.md.  Version-1 and -2
+files load fine — they simply carry no learned state / no partition policy.
+Cells are keyed by any string the reporting path binds: sort cells use
 ``<size_bucket>|<dtype>|<mesh_fp>`` (``plan_key``), MoE dispatch cells use
 ``moe/E<experts>k<top_k>|<token_bucket>|<dtype>|<mesh_fp>``
 (``models.moe.moe_plan_key``) — one learned table serves every
 ``repro.exchange`` consumer.
+
+Under multi-process ``jax.distributed``, ``Planner.autotune`` runs a
+**rank-coordinated** sweep: barriers align every rank on each candidate,
+per-rank median-of-reps timings reduce by max over ranks, rank 0's winner is
+broadcast so every rank proceeds bit-identically, and rank 0 alone writes
+the plan file (single-writer election) through the fcntl-locked
+merge-on-save path.  Those cells carry the ``/procs<P>x<D>`` fingerprint
+suffix, so a later single-process server warm-starts from them only via an
+explicit ``fingerprint=`` lookup, never by accident.
 """
 from __future__ import annotations
 
@@ -312,14 +323,94 @@ def run_plan(
     raise ValueError(f"unknown plan strategy {plan.strategy!r}")
 
 
-def _time_plan(plan, x, mesh, axis, *, reps: int, **kwargs) -> float:
+def _time_plan_reps(plan, x, mesh, axis, *, reps: int, **kwargs) -> list:
+    """Per-rep wall-clock timings (microseconds) after one warmup call.
+
+    Each rep blocks individually so the list supports order statistics —
+    the distributed sweep wants the *median* rep (robust to one gloo
+    hiccup), while the single-process sweep keeps the historical mean.
+    """
     out = run_plan(plan, x, mesh=mesh, axis=axis, **kwargs)
     jax.block_until_ready(out)
-    t0 = time.perf_counter()
+    times = []
     for _ in range(reps):
+        t0 = time.perf_counter()
         out = run_plan(plan, x, mesh=mesh, axis=axis, **kwargs)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / reps * 1e6
+        jax.block_until_ready(out)
+        times.append((time.perf_counter() - t0) * 1e6)
+    return times
+
+
+def _time_plan(plan, x, mesh, axis, *, reps: int, **kwargs) -> float:
+    times = _time_plan_reps(plan, x, mesh, axis, reps=reps, **kwargs)
+    return sum(times) / len(times)
+
+
+def _median(xs) -> float:
+    s = sorted(xs)
+    k = len(s) // 2
+    return s[k] if len(s) % 2 else 0.5 * (s[k - 1] + s[k])
+
+
+# ------------------------------------------------ distributed coordination ---
+# A rank-coordinated sweep needs three collectives the single-process planner
+# never had: a barrier so every rank times the same candidate over the same
+# quiet wire, a max-over-ranks reduction so every rank scores a candidate by
+# its *slowest* participant (the number that actually bounds a distributed
+# sort), and a broadcast so the winner every rank proceeds with is rank 0's
+# pick by construction, not N locally-identical argmins trusted to agree.
+
+def _dist_barrier(tag: str) -> None:
+    from jax.experimental import multihost_utils
+
+    multihost_utils.sync_global_devices(tag)
+
+
+def _max_over_ranks(value: float) -> float:
+    """Reduce one per-rank scalar to its max across all processes.
+
+    Every rank must call this (it is a collective); a rank whose candidate
+    failed contributes ``inf``, which poisons the candidate everywhere —
+    a plan only some ranks can run is not a plan.
+    """
+    import numpy as np
+    from jax.experimental import multihost_utils
+
+    got = np.asarray(
+        multihost_utils.process_allgather(np.asarray(value, np.float64))
+    )
+    return float(np.max(got))
+
+
+# the fixed wire size for the winning-plan broadcast: collectives need every
+# rank to contribute identical shapes, so rank 0's JSON is padded to this
+_PLAN_WIRE_BYTES = 4096
+
+
+def _broadcast_plan(plan: Optional["SortPlan"]) -> "SortPlan":
+    """Broadcast rank 0's winning plan to every rank (collective).
+
+    Serialized as zero-padded JSON in a fixed-size uint8 buffer (JSON never
+    contains NUL, so stripping the padding is unambiguous).  Non-zero ranks'
+    ``plan`` argument is ignored — the return value is authoritative.
+    """
+    import numpy as np
+    from jax.experimental import multihost_utils
+
+    buf = np.zeros(_PLAN_WIRE_BYTES, np.uint8)
+    if jax.process_index() == 0:
+        if plan is None:
+            raise RuntimeError("rank 0 has no winning plan to broadcast")
+        payload = json.dumps(plan.to_dict()).encode()
+        if len(payload) > _PLAN_WIRE_BYTES:
+            raise ValueError(f"plan JSON exceeds {_PLAN_WIRE_BYTES} bytes")
+        buf[: len(payload)] = np.frombuffer(payload, np.uint8)
+    # allgather rather than broadcast_one_to_all: the gather keeps each
+    # rank's buffer byte-exact as its own row, and every rank decodes the
+    # same authoritative row 0 — still one agreement collective.
+    rows = np.asarray(multihost_utils.process_allgather(buf))
+    out = rows[0] if rows.ndim == 2 else rows
+    return SortPlan.from_dict(json.loads(bytes(out).rstrip(b"\x00").decode()))
 
 
 PALLAS_BLOCK_SWEEP = (256, 512, 1024)
@@ -643,8 +734,19 @@ class Planner:
                 prev.skew_strikes if prev else 0, obs
             )
             part = prev_part
+            calm = prev.calm_streak if prev else 0
+            demotions = prev.demotions if prev else 0
             if part != "sample" and self.learner.should_promote(strikes):
-                part = "sample"  # the latch: merge keeps it, decay can't undo
+                part = "sample"  # the latch: merge keeps it within this
+                calm = 0  # generation — only the probation below can undo it
+            elif part == "sample":
+                # promoted cell on probation: long calm stretches demote it
+                # back to the radix family, one generation up so concurrent
+                # writers holding the stale promotion can't flap it back
+                calm = self.learner.calm_streak(calm, obs)
+                if self.learner.should_demote(calm, demotions):
+                    part, strikes, calm = None, 0, 0
+                    demotions += 1
             entry = LearnedCapacity(
                 capacity_factor=cf,
                 peak_factor=max(
@@ -653,6 +755,8 @@ class Planner:
                 observations=(prev.observations if prev else 0) + 1,
                 partition=part,
                 skew_strikes=strikes,
+                calm_streak=calm,
+                demotions=demotions,
             )
             self.learned[key] = entry
             changed = part != prev_part or (
@@ -740,6 +844,11 @@ class Planner:
             self._stats_sinks.append(weakref.ref(service))
 
     # ----------------------------------------------------------- autotune ---
+    # observability for the single-writer election: True iff the *last*
+    # autotune call on this planner persisted the plan file from this
+    # process (rank 0 in a distributed sweep; any rank single-process)
+    last_autotune_wrote: bool = False
+
     def autotune(
         self,
         n: int,
@@ -751,6 +860,9 @@ class Planner:
         quick: bool = False,
         seed: int = 0,
         save: bool = True,
+        distributed: Optional[bool] = None,
+        candidates=None,
+        on_candidate=None,
         **kwargs,
     ) -> SortPlan:
         """Microbenchmark every candidate on synthetic keys; persist winner.
@@ -758,43 +870,109 @@ class Planner:
         Timed at the size bucket (next pow2 of ``n``) so every n in the bucket
         shares the plan — the same bucketing the compiled-executable cache
         uses, keeping plan granularity == compilation granularity.
+
+        **Distributed sweeps.**  Under multi-process ``jax.distributed``
+        (``distributed=None`` auto-detects ``jax.process_count() > 1``;
+        pass ``False`` to opt a rank-divergent caller out) the sweep is
+        rank-coordinated: a barrier precedes each candidate so every rank
+        times it over a quiet wire, each rank scores the candidate by its
+        **median** rep (robust to one slow rep), the per-rank scores reduce
+        by **max over ranks** (a distributed sort is as slow as its slowest
+        participant — and the reduced table is bit-identical everywhere, so
+        every rank computes the same argmin), rank 0's winner is broadcast
+        to all ranks as an explicit agreement step, and **rank 0 alone**
+        writes the plan file through the fcntl-locked merge-on-save path —
+        a final barrier holds the other ranks until the file is on disk.
+        The cell lands under the ``/procs<P>x<D>`` fingerprint, so it never
+        masquerades as a single-host plan.  ``last_autotune_wrote`` records
+        which process performed the save.
+
+        ``candidates=`` substitutes an explicit plan list for the default
+        grid (how tests and smoke jobs keep a sweep tiny); ``on_candidate``
+        is called as ``on_candidate(i, plan)`` before each candidate is
+        timed — the multihost fault-injection battery hooks rank crashes
+        and hangs there.
         """
         import numpy as np
 
+        if distributed is None:
+            distributed = jax.process_count() > 1
         nb = next_pow2(n)
         x = jnp.asarray(
             np.random.default_rng(seed).integers(100, 1000, size=nb).astype("int64"),
             jnp.dtype(dtype),
         )
+        x_mesh = x
         if mesh is not None:
             P_ = mesh.shape[axis]
             if nb % P_:
                 raise ValueError(
                     f"axis size {P_} must divide the size bucket {nb}"
                 )
+            if distributed:
+                # multi-process meshes need committed global arrays; the
+                # single-process forced mesh auto-shards host-local ones
+                from jax.sharding import NamedSharding, PartitionSpec
+
+                x_mesh = jax.device_put(
+                    x, NamedSharding(mesh, PartitionSpec(axis))
+                )
+        key = plan_key(nb, dtype, mesh)
+        cands = (
+            candidate_plans(mesh, quick=quick)
+            if candidates is None
+            else list(candidates)
+        )
         interpret_backend = jax.default_backend() != "tpu"
         best = None
-        for cand in candidate_plans(mesh, quick=quick):
+        for i, cand in enumerate(cands):
             if (
                 interpret_backend
                 and cand.local_impl == "pallas"
                 and nb > PALLAS_INTERPRET_MAX
             ):
                 continue  # interpret-mode kernels: correctness path, not timeable
+            if on_candidate is not None:
+                on_candidate(i, cand)
+            if distributed:
+                _dist_barrier(f"autotune:{key}:{i}")
+            arr = x if cand.strategy == "shared" else x_mesh
             try:
-                us = _time_plan(cand, x, mesh, axis, reps=reps, **kwargs)
+                times = _time_plan_reps(cand, arr, mesh, axis, reps=reps, **kwargs)
+                us = _median(times) if distributed else sum(times) / len(times)
             except Exception:
                 if cand.local_impl != "pallas":
                     raise
                 # a pallas tile the local Mosaic/backend can't lower is a
-                # skipped candidate, not a failed sweep
-                continue
+                # skipped candidate, not a failed sweep — but a distributed
+                # rank still owes the reduction its (poisoned) score
+                if not distributed:
+                    continue
+                us = float("inf")
+            if distributed:
+                us = _max_over_ranks(us)
+                if us == float("inf"):
+                    continue
             cand = replace(cand, us_per_call=round(us, 2))
             if best is None or cand.us_per_call < best.us_per_call:
                 best = cand
-        self.plans[plan_key(nb, dtype, mesh)] = best
+        if best is None:
+            raise RuntimeError(f"autotune: no timeable candidate for {key}")
+        if distributed:
+            # every rank already holds the same argmin (the reduced table is
+            # identical), but agreement is asserted, not assumed: rank 0's
+            # pick is what everyone proceeds with, bit for bit
+            best = _broadcast_plan(best)
+        self.plans[key] = best
+        self.last_autotune_wrote = False
         if save and self.path:
-            self.save()
+            if not distributed or jax.process_index() == 0:
+                self.save()
+                self.last_autotune_wrote = True
+            if distributed:
+                # hold every rank until the winner is on disk: a rank that
+                # re-loads the shared file right after autotune must see it
+                _dist_barrier(f"autotune:{key}:saved")
         return best
 
 

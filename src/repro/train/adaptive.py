@@ -25,6 +25,7 @@ from typing import Optional
 
 import jax.numpy as jnp
 
+from repro.core.bitonic import next_pow2
 from repro.exchange import ExchangeObservation, expert_capacity
 from repro.models.moe import MoEConfig, moe_plan_key
 
@@ -74,10 +75,22 @@ class MoECapacityController:
     def capacity(self) -> int:
         """Per-(sender, expert) token capacity for the next step — static,
         so the driver keys its compiled step functions on it and a learned
-        bump costs exactly one recompile."""
-        return expert_capacity(
+        bump costs exactly one recompile.
+
+        The raw factor-derived capacity is **bucketed to the next power of
+        two** (the same pow2 bucketing token counts use), clamped to ``m``
+        — the per-sender assignment count, beyond which capacity is
+        loss-free by construction.  Without the bucket, a gradually
+        decaying learned factor would shift the raw capacity by one or two
+        tokens step after step, and since the driver keys compiled step
+        functions on capacity, every shift would be a fresh lowering; with
+        it, the factor must halve the raw capacity before a new executable
+        is built.
+        """
+        raw = expert_capacity(
             self.t_loc, self.cfg.top_k, self.cfg.n_experts, self.factor
         )
+        return min(next_pow2(max(raw, 1)), max(self.m, 1))
 
     def observe(self, metrics: dict, *, capacity: Optional[int] = None) -> None:
         """Fold one completed step's ``moe_dropped``/``moe_peak`` metrics

@@ -58,6 +58,27 @@ class MultihostContext:
 
         return np.asarray(multihost_utils.process_allgather(x, tiled=True))
 
+    def maybe_fault(self, point: str) -> None:
+        """Fault-injection hook: trigger the configured fault at ``point``.
+
+        Bodies sprinkle ``ctx.maybe_fault("...")`` at interesting spots;
+        ``args["fault"] = {"rank": r, "point": p, "kind": ...}`` arms exactly
+        one of them on exactly one rank.  ``kind="crash"`` exits hard
+        (``os._exit``, no report, no distributed shutdown — as close to a
+        segfault as python gets); ``kind="hang"`` sleeps far past any test
+        timeout, wedging whatever collective the peers are blocked in.
+        Unarmed ranks and unmatched points are no-ops, so the same body
+        runs faulted and fault-free.
+        """
+        fault = self.args.get("fault")
+        if not fault or fault.get("rank") != self.rank:
+            return
+        if fault.get("point") != point:
+            return
+        if fault.get("kind", "crash") == "crash":
+            os._exit(int(fault.get("exit_code", 13)))
+        time.sleep(float(fault.get("sleep_s", 600.0)))
+
 
 def load_body(spec: str):
     """``"<file.py>:<function>"`` -> callable, file relative to this dir.

@@ -420,6 +420,139 @@ def moe_train_step_body(ctx):
     }
 
 
+# -------------------------------------------------- distributed autotune ---
+def _autotune_candidates():
+    """The tiny explicit candidate list the autotune bodies sweep: one
+    member of each strategy family that is known-good on a CPU gloo mesh,
+    small enough that a 2-proc sweep stays inside a CI smoke budget."""
+    from repro.engine.planner import SortPlan
+
+    return [
+        SortPlan("shared", local_impl="xla"),
+        SortPlan("shared", local_impl="merge"),
+        SortPlan("cluster", local_impl="xla", capacity_factor=2.0, mode="splitters"),
+        SortPlan("cluster", local_impl="xla", capacity_factor=2.0, mode="sample"),
+    ]
+
+
+def autotune_body(ctx):
+    """Rank-coordinated ``Planner.autotune`` over the whole process mesh.
+
+    Every rank sweeps the same explicit candidate list against one shared
+    plan-cache file; the distributed path must leave every rank holding the
+    same winning plan (broadcast from rank 0), an identical in-memory plan
+    table, and — after the post-save barrier — a cache file on disk whose
+    tuned cell matches what every rank holds.  ``ctx.maybe_fault`` hooks
+    each candidate boundary, so the same body doubles as the fault-injection
+    battery (crash/hang mid-sweep).
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.engine.planner import Planner, mesh_fingerprint, plan_key
+
+    a = ctx.args
+    n, reps = a.get("n", 256), a.get("reps", 3)
+    planner = Planner(a["plans_path"])
+    mesh = ctx.mesh()
+
+    def on_candidate(i, cand):
+        ctx.maybe_fault(f"candidate:{i}")
+
+    best = planner.autotune(
+        n,
+        jnp.int32,
+        mesh=mesh,
+        axis="x",
+        reps=reps,
+        candidates=_autotune_candidates(),
+        on_candidate=on_candidate,
+    )
+    key = plan_key(n, jnp.int32, mesh)
+    # every rank re-reads the shared file the post-save barrier guarantees
+    # is on disk; its tuned cell must be what this rank holds in memory
+    ondisk = Planner(a["plans_path"]).plans.get(key)
+    assert ondisk == best, f"disk {ondisk} != broadcast winner {best}"
+    return {
+        "processes": jax.process_count(),
+        "mesh_fp": mesh_fingerprint(mesh),
+        "plan_key": key,
+        "best": best.to_dict(),
+        "plans": {k: p.to_dict() for k, p in sorted(planner.plans.items())},
+        "wrote": planner.last_autotune_wrote,
+    }
+
+
+def autotune_local_body(ctx):
+    """Two *uncoordinated* autotuners racing one shared plan cache.
+
+    Each rank opts out of the distributed sweep (``distributed=False`` — its
+    cells are rank-divergent, so collectives would deadlock) and tunes a
+    rank-specific size bucket of shared-strategy candidates into the same
+    file.  The fcntl-locked merge-on-save must union the tables: the final
+    file carries every rank's cell.
+    """
+    import jax.numpy as jnp
+
+    from repro.engine.planner import Planner, SortPlan, plan_key
+
+    a = ctx.args
+    n = a.get("base_n", 64) << ctx.rank  # rank-distinct size buckets
+    planner = Planner(a["plans_path"])
+    cands = [
+        SortPlan("shared", local_impl="xla"),
+        SortPlan("shared", local_impl="merge"),
+    ]
+    best = planner.autotune(
+        n, jnp.int32, reps=a.get("reps", 2), distributed=False, candidates=cands
+    )
+    key = plan_key(n, jnp.int32)
+    return {
+        "plan_key": key,
+        "best": best.to_dict(),
+        "wrote": planner.last_autotune_wrote,
+        "file_keys": sorted(Planner(a["plans_path"]).plans),
+    }
+
+
+def gloo_timing_body(ctx):
+    """Time model B (shared) and model D (cluster) on this job's mesh.
+
+    Run under 2-process gloo *and* under the single-process forced mesh with
+    the same args, the two reports quantify what the real wire costs: the
+    shared row is pure local compute (identical either way), the cluster row
+    pays gloo message passing only in the multi-process run.  Timings use
+    the planner's own helpers — median of reps, max over ranks — so the
+    number is the one a distributed autotune sweep would score.
+    """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.engine import planner as planner_mod
+    from repro.engine.planner import SortPlan
+
+    a = ctx.args
+    n, reps, seed = a.get("n", 4096), a.get("reps", 3), a.get("seed", 0)
+    rng = np.random.default_rng(seed)
+    x_np = rng.integers(0, 1 << 20, size=n).astype(np.int32)
+    mesh = ctx.mesh()
+    plans = {
+        "shared": (SortPlan("shared", local_impl="xla"), jnp.asarray(x_np)),
+        "cluster": (
+            SortPlan("cluster", local_impl="xla", capacity_factor=2.0, mode="sample"),
+            ctx.global_array(x_np, mesh),
+        ),
+    }
+    out = {}
+    for name, (plan, arr) in sorted(plans.items()):
+        times = planner_mod._time_plan_reps(plan, arr, mesh, "x", reps=reps)
+        us = planner_mod._median(times)
+        out[name] = planner_mod._max_over_ranks(us) if ctx.nprocs > 1 else us
+    out["devices"] = jax.device_count()
+    return out
+
+
 # --------------------------------------------------------- failure injection ---
 def crash_body(ctx):
     """The victim rank dies hard mid-test; survivors sit in a long wait.

@@ -60,6 +60,44 @@ def free_port() -> int:
         return s.getsockname()[1]
 
 
+def validate_report_doc(doc: Any) -> dict:
+    """Validate one per-rank report document against the report schema.
+
+    The contract every report satisfies — whether a rank wrote it itself
+    (``_worker.py``) or the coordinator synthesized it for a rank that died
+    before writing: ``rank``/``ok``/``result``/``error`` always present,
+    types as documented in docs/testing.md, a failed report always carries
+    an error string, and the whole document round-trips as JSON.  Returns
+    the document; raises ``ValueError`` on any violation.
+    """
+    if not isinstance(doc, dict):
+        raise ValueError(f"report must be an object, got {type(doc).__name__}")
+    missing = {"rank", "ok", "result", "error"} - set(doc)
+    if missing:
+        raise ValueError(f"report missing fields: {sorted(missing)}")
+    rank = doc["rank"]
+    if not isinstance(rank, int) or isinstance(rank, bool) or rank < 0:
+        raise ValueError(f"rank must be a non-negative int: {rank!r}")
+    if not isinstance(doc["ok"], bool):
+        raise ValueError(f"ok must be a bool: {doc['ok']!r}")
+    for key in ("error", "traceback"):
+        if doc.get(key) is not None and not isinstance(doc[key], str):
+            raise ValueError(f"{key} must be null or a string: {doc[key]!r}")
+    dur = doc.get("duration_s")
+    if dur is not None and (isinstance(dur, bool) or not isinstance(dur, (int, float))):
+        raise ValueError(f"duration_s must be null or a number: {dur!r}")
+    rc = doc.get("returncode")
+    if rc is not None and (isinstance(rc, bool) or not isinstance(rc, int)):
+        raise ValueError(f"returncode must be null or an int: {rc!r}")
+    if not doc["ok"] and doc["error"] is None:
+        raise ValueError("a failed report must carry an error")
+    try:
+        json.dumps(doc)
+    except (TypeError, ValueError) as e:
+        raise ValueError(f"report is not JSON-serializable: {e}") from None
+    return doc
+
+
 @dataclass
 class RankReport:
     """One rank's outcome: its JSON report plus process-level diagnostics."""
@@ -73,6 +111,21 @@ class RankReport:
     duration_s: Optional[float] = None
     stdout: str = ""
     stderr: str = ""
+
+    def to_doc(self) -> dict:
+        """This report as a schema-valid JSON document — identical shape for
+        ranks that reported themselves and ranks the coordinator had to
+        synthesize after they died (stdio tails are diagnostics, not part
+        of the schema)."""
+        return {
+            "rank": self.rank,
+            "ok": self.ok,
+            "result": self.result,
+            "error": self.error,
+            "traceback": self.traceback,
+            "returncode": self.returncode,
+            "duration_s": self.duration_s,
+        }
 
     def summary(self) -> str:
         status = "ok" if self.ok else f"FAILED (rc={self.returncode})"
@@ -257,13 +310,16 @@ def run_multihost(
         if os.path.exists(rpath):
             try:
                 with open(rpath) as f:
-                    doc = json.load(f)
+                    doc = validate_report_doc(json.load(f))
                 report.ok = bool(doc.get("ok")) and p.poll() == 0
                 report.result = doc.get("result")
                 report.error = doc.get("error")
                 report.traceback = doc.get("traceback")
                 report.duration_s = doc.get("duration_s")
-            except Exception as e:  # unreadable report = failed rank
+                if not report.ok and report.error is None:
+                    # the rank said ok but its process still died (rc != 0)
+                    report.error = f"rank reported ok but exited rc={p.poll()}"
+            except Exception as e:  # unreadable/invalid report = failed rank
                 report.error = f"unreadable report: {e!r}"
         elif timed_out:
             report.error = f"no report: run exceeded {timeout:.0f}s timeout"

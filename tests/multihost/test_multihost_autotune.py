@@ -1,0 +1,146 @@
+"""Distributed autotune: the rank-coordinated sweep on real process meshes.
+
+The acceptance bar for the tentpole: a ``Planner.autotune`` sweep run inside
+a live ``jax.distributed`` job must land every rank on the same winning plan
+(bit-identical tables, broadcast from rank 0), must elect rank 0 as the only
+writer of the shared plan cache, and — the fault-injection battery — must
+either complete identically on all ranks or fail *contained*: a rank killed
+or hung mid-sweep never leaves a corrupt or partially-written cache behind.
+"""
+import json
+import os
+
+import pytest
+
+import harness
+
+pytestmark = pytest.mark.multihost
+
+
+def _strict_load(plans_path):
+    """Load the shared cache the way tooling does: strict, fresh planner."""
+    from repro.engine.planner import Planner
+
+    return Planner().load(plans_path, strict=True)
+
+
+def _seed_cache(plans_path):
+    """Pre-seed the shared cache with one known cell so the fault tests can
+    prove a failed sweep preserved prior contents, not just an empty file."""
+    from repro.engine.planner import Planner, SortPlan
+
+    p = Planner()
+    p.plans["32|int32|seed/fp"] = SortPlan("shared", us_per_call=1.0)
+    p.save(plans_path)
+    return "32|int32|seed/fp"
+
+
+def _run_autotune(plans_path, nprocs, *, reps=2, fault=None, timeout=None):
+    args = {"plans_path": plans_path, "n": 256, "reps": reps}
+    if fault is not None:
+        args["fault"] = fault
+    kw = {} if timeout is None else {"timeout": timeout}
+    return harness.run_multihost("bodies.py:autotune_body", nprocs, args=args, **kw)
+
+
+# ------------------------------------------------------------ bit identity ---
+def test_two_process_sweep_bit_identical_across_ranks_and_cache(tmp_path):
+    plans_path = os.path.join(str(tmp_path), "plans.json")
+    run = _run_autotune(plans_path, 2).require_success()
+    r0, r1 = run.results()
+    # the whole plan table — winner, timings, every cell — is bit-identical
+    assert r0["best"] == r1["best"]
+    assert r0["plans"] == r1["plans"]
+    assert r0["plan_key"] == r1["plan_key"]
+    assert "/procs2x1" in r0["mesh_fp"], r0["mesh_fp"]
+    # ... and identical to the cache rank 0 wrote
+    fresh = _strict_load(plans_path)
+    assert fresh.plans[r0["plan_key"]].to_dict() == r0["best"]
+    assert {k: p.to_dict() for k, p in fresh.plans.items()} == r0["plans"]
+
+
+def test_four_process_sweep_bit_identical_across_ranks_and_cache(tmp_path):
+    plans_path = os.path.join(str(tmp_path), "plans.json")
+    run = _run_autotune(plans_path, 4).require_success()
+    results = run.results()
+    assert all(r["best"] == results[0]["best"] for r in results)
+    assert all(r["plans"] == results[0]["plans"] for r in results)
+    assert "/procs4x1" in results[0]["mesh_fp"]
+    fresh = _strict_load(plans_path)
+    assert fresh.plans[results[0]["plan_key"]].to_dict() == results[0]["best"]
+
+
+def test_rank0_is_the_single_writer(tmp_path):
+    """The single-writer election: rank 0 persisted the winner, every other
+    rank only read the file the post-save barrier guaranteed was on disk."""
+    plans_path = os.path.join(str(tmp_path), "plans.json")
+    run = _run_autotune(plans_path, 2, reps=1).require_success()
+    assert [r["wrote"] for r in run.results()] == [True, False]
+    with open(plans_path) as f:
+        doc = json.load(f)
+    assert doc["version"] == 3
+    (key,) = doc["plans"]
+    assert key.endswith("/procs2x1"), key
+
+
+# ------------------------------------------------- fault-injection battery ---
+def test_rank_killed_mid_sweep_leaves_cache_uncorrupted(tmp_path):
+    """Rank 1 dies hard between two timed candidates; rank 0 wedges in the
+    next barrier and is reaped by the coordinator.  The sweep never reached
+    its save, so the shared cache must still hold exactly the pre-seeded
+    cell — strictly loadable, no partial writes, no leftover tmp files."""
+    plans_path = os.path.join(str(tmp_path), "plans.json")
+    seed_key = _seed_cache(plans_path)
+    run = _run_autotune(
+        plans_path,
+        2,
+        fault={"rank": 1, "point": "candidate:1", "kind": "crash"},
+        timeout=120,
+    )
+    assert not run.ok, run.describe()
+    assert run.reports[1].returncode == 13, run.describe()
+    fresh = _strict_load(plans_path)
+    assert sorted(fresh.plans) == [seed_key]
+    assert fresh.learned == {}
+    tmps = [f for f in os.listdir(str(tmp_path)) if ".tmp." in f]
+    assert not tmps, f"partial plan-cache writes left behind: {tmps}"
+
+
+def test_rank_hung_during_timed_collective_fails_contained(tmp_path):
+    """Rank 1 wedges mid-sweep, leaving rank 0 blocked inside the candidate
+    barrier (a real collective).  The run must end — gloo's own timeout or
+    the harness deadline, whichever lands first — without the pytest run
+    hanging and without the cache changing."""
+    plans_path = os.path.join(str(tmp_path), "plans.json")
+    seed_key = _seed_cache(plans_path)
+    run = _run_autotune(
+        plans_path,
+        2,
+        fault={"rank": 1, "point": "candidate:1", "kind": "hang"},
+        timeout=75,
+    )
+    assert not run.ok, run.describe()
+    assert all(not r.ok for r in run.reports)
+    fresh = _strict_load(plans_path)
+    assert sorted(fresh.plans) == [seed_key]
+
+
+def test_two_concurrent_autotuners_merge_to_a_union_table(tmp_path):
+    """Two uncoordinated autotuning processes (``distributed=False``) race
+    rank-distinct cells into one shared cache: the fcntl-locked
+    merge-on-save must union the tables — both cells survive, under their
+    multi-process topology fingerprint, strictly loadable."""
+    plans_path = os.path.join(str(tmp_path), "plans.json")
+    run = harness.run_multihost(
+        "bodies.py:autotune_local_body",
+        2,
+        args={"plans_path": plans_path, "base_n": 64, "reps": 2},
+    ).require_success()
+    r0, r1 = run.results()
+    assert r0["plan_key"] != r1["plan_key"], "ranks must tune distinct cells"
+    # every uncoordinated autotuner wrote its own cell itself
+    assert [r["wrote"] for r in run.results()] == [True, True]
+    fresh = _strict_load(plans_path)
+    assert sorted(fresh.plans) == sorted([r0["plan_key"], r1["plan_key"]])
+    assert fresh.plans[r0["plan_key"]].to_dict() == r0["best"]
+    assert fresh.plans[r1["plan_key"]].to_dict() == r1["best"]

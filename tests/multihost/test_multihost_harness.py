@@ -32,6 +32,12 @@ def test_killed_rank_fails_cleanly_within_grace_period():
     )
     # per-rank diagnostics are available for the failure message
     assert "rank 1: FAILED" in run.describe()
+    # every report — including the one the coordinator synthesized for the
+    # rank that died before writing anything — satisfies the report schema
+    for r in run.reports:
+        doc = harness.validate_report_doc(r.to_doc())
+        assert doc["rank"] == r.rank
+    assert run.reports[1].result is None
 
 
 def test_hung_run_is_killed_at_timeout():
@@ -64,3 +70,49 @@ def test_require_success_message_names_the_failing_rank():
     )
     with pytest.raises(AssertionError, match="rank 0: FAILED"):
         run.require_success()
+
+
+# ------------------------------------------------------- report schema ---
+def test_report_schema_validator_rejects_malformed():
+    """The schema contract, pinned negatively: every way a report can rot
+    raises with a message naming the violation."""
+    good = {"rank": 0, "ok": True, "result": {"x": 1}, "error": None}
+    assert harness.validate_report_doc(good) is good
+    bad = [
+        ([1, 2], "must be an object"),
+        ({"rank": 0, "ok": True}, "missing fields"),
+        ({**good, "rank": -1}, "non-negative"),
+        ({**good, "rank": True}, "non-negative int"),
+        ({**good, "ok": 1}, "must be a bool"),
+        ({**good, "error": 5}, "null or a string"),
+        ({**good, "traceback": 5}, "null or a string"),
+        ({**good, "duration_s": "3s"}, "null or a number"),
+        ({**good, "returncode": "0"}, "null or an int"),
+        ({**good, "ok": False}, "must carry an error"),
+        ({**good, "result": {1, 2}}, "not JSON-serializable"),
+    ]
+    for doc, msg in bad:
+        with pytest.raises(ValueError, match=msg):
+            harness.validate_report_doc(doc)
+
+
+def test_on_disk_reports_are_schema_valid():
+    """What ranks actually write (``_worker.py``) satisfies the same schema
+    the coordinator's synthesized reports do — ok and failed alike."""
+    import json
+    import os
+
+    ok_run = harness.run_multihost(
+        "bodies.py:cluster_sort_body", 1, args={"n": 64, "seed": 3}
+    ).require_success()
+    failed_run = harness.run_multihost(
+        "bodies.py:cluster_sort_body", 1, args={"n": 64, "mode": "nonsense"}
+    )
+    assert not failed_run.ok
+    for run, want_ok in ((ok_run, True), (failed_run, False)):
+        path = os.path.join(run.report_dir, "report-0.json")
+        with open(path) as f:
+            doc = harness.validate_report_doc(json.load(f))
+        assert doc["ok"] is want_ok
+        if not want_ok:
+            assert "nonsense" in (doc["error"] or "") + (doc["traceback"] or "")

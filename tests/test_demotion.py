@@ -1,0 +1,176 @@
+"""Probation / demotion: the slow counter that un-latches skew promotion.
+
+Promotion (radix -> sample) used to be one-way: a single skew era pinned a
+cell on the balanced-but-slower sample partition forever.  These tests pin
+the way back — a long calm streak demotes the cell — and, critically, that
+demotion cannot *flap* under the concurrent-writer merge latch: the
+``demotions`` generation counter makes a demoted cell win merges against
+every stale promoted entry a laggard writer might re-save.
+"""
+import jax.numpy as jnp
+
+from repro.engine.adapt import CapacityLearner, ExchangeObservation
+from repro.engine.planner import Planner, plan_key
+
+KEY = "4096|int32|cpu/x=8"
+
+
+def _skewed_radix():
+    # peak/mean ratio = 64 * 8 / 128 = 4.0 > promote_ratio
+    return ExchangeObservation(
+        m=128, part_buckets=8, capacity=64, peak=64,
+        overflowed=True, retries=1, partition="radix",
+    )
+
+
+def _calm_sample():
+    # ratio = 16 * 8 / 128 = 1.0 <= demote_ratio, no overflow
+    return ExchangeObservation(
+        m=128, part_buckets=8, capacity=32, peak=16,
+        overflowed=False, retries=0, partition="sample",
+    )
+
+
+def _rough_sample():
+    # ratio 3.0 > demote_ratio and overflowed: not evidence of calm
+    return ExchangeObservation(
+        m=128, part_buckets=8, capacity=32, peak=48,
+        overflowed=True, retries=1, partition="sample",
+    )
+
+
+def _promoted_planner(path=None, *, demote_after=4):
+    """A planner whose KEY cell has just latched to the sample partition."""
+    p = Planner(path)
+    p.learner = CapacityLearner(demote_after=demote_after)
+    for _ in range(p.learner.promote_after):
+        p.observe_exchange(KEY, _skewed_radix())
+    assert p.promotion_state(KEY)[0] == "sample"
+    return p
+
+
+# ----------------------------------------------------------- the slow path ---
+def test_calm_streak_demotes_after_threshold():
+    p = _promoted_planner()
+    for i in range(p.learner.demote_after - 1):
+        entry = p.observe_exchange(KEY, _calm_sample())
+        assert entry.partition == "sample", f"demoted early at streak {i + 1}"
+        assert entry.calm_streak == i + 1
+    entry = p.observe_exchange(KEY, _calm_sample())  # streak hits the bar
+    assert entry.partition is None, "cell must demote back to the radix family"
+    assert entry.demotions == 1
+    assert entry.skew_strikes == 0 and entry.calm_streak == 0
+    # the serving path follows: no more injected sample mode
+    assert p.promotion_state(KEY) == (None, 0)
+
+
+def test_rough_sample_call_resets_probation():
+    p = _promoted_planner()
+    for _ in range(p.learner.demote_after - 1):
+        p.observe_exchange(KEY, _calm_sample())
+    p.observe_exchange(KEY, _rough_sample())  # skew is back: streak resets
+    for _ in range(p.learner.demote_after - 1):
+        entry = p.observe_exchange(KEY, _calm_sample())
+    assert entry.partition == "sample", "reset streak must restart from zero"
+    assert entry.calm_streak == p.learner.demote_after - 1
+
+
+def test_non_sample_observations_leave_probation_untouched():
+    p = _promoted_planner()
+    for _ in range(2):
+        p.observe_exchange(KEY, _calm_sample())
+    # untagged (e.g. MoE) and empty observations say nothing about calm
+    untagged = ExchangeObservation(
+        m=128, part_buckets=8, capacity=32, peak=16,
+        overflowed=False, retries=0,
+    )
+    empty = ExchangeObservation(
+        m=0, part_buckets=8, capacity=1, peak=0,
+        overflowed=False, retries=0, partition="sample",
+    )
+    p.observe_exchange(KEY, untagged)
+    entry = p.observe_exchange(KEY, empty)
+    assert entry.partition == "sample" and entry.calm_streak == 2
+
+
+def test_repromotion_backoff_doubles_the_threshold():
+    p = _promoted_planner()
+    for _ in range(p.learner.demote_after):
+        p.observe_exchange(KEY, _calm_sample())
+    assert p.learned[KEY].demotions == 1
+    # the skew comes back: the ordinary three-strike promotion re-latches,
+    # one generation up
+    for _ in range(p.learner.promote_after):
+        entry = p.observe_exchange(KEY, _skewed_radix())
+    assert entry.partition == "sample" and entry.demotions == 1
+    # this generation's probation is twice as long
+    for _ in range(p.learner.demote_after):
+        entry = p.observe_exchange(KEY, _calm_sample())
+    assert entry.partition == "sample", "backoff must slow the second demotion"
+    for _ in range(p.learner.demote_after):
+        entry = p.observe_exchange(KEY, _calm_sample())
+    assert entry.partition is None and entry.demotions == 2
+
+
+# ------------------------------------------- no flapping under the merge ---
+def test_demotion_survives_stale_promoted_writer(tmp_path):
+    """The concurrent-writer no-flap guarantee: a laggard planner re-saving
+    its stale promoted entry cannot resurrect a promotion the calm streak
+    already demoted — in either save order."""
+    for flip in (False, True):
+        path = str(tmp_path / f"plans-{flip}.json")
+        p1 = _promoted_planner(path)
+        p1.save()
+        p2 = Planner(path)  # loads the promoted entry; never sees the calm
+        assert p2.promotion_state(KEY)[0] == "sample"
+
+        for _ in range(p1.learner.demote_after):
+            p1.observe_exchange(KEY, _calm_sample())
+        assert p1.learned[KEY].partition is None
+
+        first, second = (p2, p1) if flip else (p1, p2)
+        first.save()
+        second.save()
+        fresh = Planner(path)
+        got = fresh.learned[KEY]
+        assert got.partition is None, f"stale promotion flapped back (flip={flip})"
+        assert got.demotions == 1
+
+
+def test_stale_writer_with_more_observations_still_cannot_flap(tmp_path):
+    """Even when the stale promoted lineage is *more informed* (it wins the
+    capacity factor), the partition decision follows the demotion
+    generation, not the observation count."""
+    path = str(tmp_path / "plans.json")
+    p1 = _promoted_planner(path)
+    p1.save()
+    p2 = Planner(path)
+    # p2 keeps serving skewed sample-era traffic: many more observations,
+    # still generation 0
+    p2.learner = CapacityLearner()
+    for _ in range(3 * p2.learner.demote_after):
+        p2.observe_exchange(KEY, _rough_sample())
+    # p1 sees the calm era and demotes
+    for _ in range(p1.learner.demote_after):
+        p1.observe_exchange(KEY, _calm_sample())
+    p1.save()
+    p2.save()
+    got = Planner(path).learned[KEY]
+    assert got.observations == 3 * p2.learner.demote_after + 3
+    assert got.partition is None and got.demotions == 1
+
+
+def test_cluster_kwargs_stops_injecting_sample_mode_after_demotion():
+    """The serving path end to end: a promoted cell's cluster_kwargs inject
+    ``mode="sample"``; after the calm streak demotes it they stop, and the
+    radix-family default is back in charge."""
+    n, dtype = 4096, jnp.int32
+    p = Planner()
+    p.learner = CapacityLearner(demote_after=4)
+    key = plan_key(n, dtype)
+    for _ in range(p.learner.promote_after):
+        p.observe_exchange(key, _skewed_radix())
+    assert p.cluster_kwargs(n, dtype)["mode"] == "sample"
+    for _ in range(p.learner.demote_after):
+        p.observe_exchange(key, _calm_sample())
+    assert "mode" not in p.cluster_kwargs(n, dtype)

@@ -178,9 +178,10 @@ _PARTITION_RANK = {None: 0, "radix": 1, "sample": 2}
 
 def _entry(triple):
     cf, peak, raw = triple
-    # partition/skew_strikes derived from the same floats so the lattice
-    # properties get exercised across all three partition states without
-    # needing richer strategies than the hypothesis shim provides
+    # partition/strikes/calm/demotions derived from the same floats so the
+    # lattice properties get exercised across all partition states and
+    # demotion generations without needing richer strategies than the
+    # hypothesis shim provides
     parts = (None, "radix", "sample")
     return LearnedCapacity(
         capacity_factor=round(cf, 2),
@@ -188,7 +189,14 @@ def _entry(triple):
         observations=int(raw * 10),
         partition=parts[int(raw * 100) % 3],
         skew_strikes=int(cf * 10) % 7,
+        calm_streak=int(peak * 10) % 5,
+        demotions=int(peak * 100) % 3,
     )
+
+
+def _pstate(e):
+    """The partition lineage a merge compares: (generation, latch rank)."""
+    return (e.demotions, _PARTITION_RANK[e.partition])
 
 
 @given(_entries, _entries, _entries)
@@ -201,11 +209,21 @@ def test_learned_capacity_merge_is_semilattice(a, b, c):
     assert merged.peak_factor == max(ea.peak_factor, eb.peak_factor)
     assert merged.observations == max(ea.observations, eb.observations)
     assert merged.capacity_factor in (ea.capacity_factor, eb.capacity_factor)
-    assert merged.skew_strikes == max(ea.skew_strikes, eb.skew_strikes)
-    # the promotion latch: merge never demotes the partition family
-    assert _PARTITION_RANK[merged.partition] == max(
-        _PARTITION_RANK[ea.partition], _PARTITION_RANK[eb.partition]
-    )
+    # the promotion latch, generation-aware: the newest demotion generation
+    # wins, and within it the higher latch — so merge never un-promotes a
+    # cell within its generation, and never re-promotes across a demotion
+    assert _pstate(merged) == max(_pstate(ea), _pstate(eb))
+    if _pstate(ea) == _pstate(eb):
+        # same lineage: the counters accumulate (max)
+        assert merged.skew_strikes == max(ea.skew_strikes, eb.skew_strikes)
+        assert merged.calm_streak == max(ea.calm_streak, eb.calm_streak)
+    else:
+        # different lineage: the winning entry's counters ride along whole
+        win = ea if _pstate(ea) > _pstate(eb) else eb
+        assert (merged.skew_strikes, merged.calm_streak) == (
+            win.skew_strikes,
+            win.calm_streak,
+        )
 
 
 def test_merge_lets_own_decay_win_over_stale_disk_state():

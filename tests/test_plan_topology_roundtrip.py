@@ -1,0 +1,111 @@
+"""Warm-start across topologies: ``/procs<P>x<D>`` cells through the cache.
+
+The distributed autotune sweep has rank 0 persist cells keyed by the
+multi-process topology fingerprint.  A later process — another rank of the
+same topology, a tooling script, or a single-process ``serve.py`` — must
+read those cells back exactly, and a single-process server must never
+mistake them for its own ``local/...`` cells (the plans were timed over
+collectives that cross real process boundaries).
+"""
+import json
+
+import jax.numpy as jnp
+
+from repro.engine.adapt import LearnedCapacity
+from repro.engine.planner import (
+    Planner,
+    SortPlan,
+    mesh_fingerprint,
+    parse_plan_key,
+    plan_key,
+)
+
+PROCS_FP = "cpu/x=4/procs2x2"
+
+
+def _procs_cell():
+    return plan_key(4096, jnp.int32, fingerprint=PROCS_FP)
+
+
+def _tuned_plan():
+    return SortPlan(
+        "cluster", local_impl="xla", capacity_factor=2.0,
+        mode="sample", us_per_call=123.45,
+    )
+
+
+def test_procs_cells_round_trip_bit_stably(tmp_path):
+    """What rank 0 saves, a fresh single-process planner loads back exactly
+    — and a re-save is byte-identical (the cache is a fixed point)."""
+    path = str(tmp_path / "plans.json")
+    key = _procs_cell()
+    p = Planner(path)
+    p.plans[key] = _tuned_plan()
+    p.learned[key] = LearnedCapacity(
+        2.5, 3.0, 7, partition="sample", skew_strikes=3, demotions=1
+    )
+    p.save()
+    with open(path, "rb") as f:
+        first_bytes = f.read()
+
+    fresh = Planner(path)
+    assert fresh.plans[key] == _tuned_plan()
+    assert fresh.learned[key] == p.learned[key]
+    fresh.save()
+    with open(path, "rb") as f:
+        assert f.read() == first_bytes, "reload+save must be a fixed point"
+
+
+def test_procs_cells_survive_strict_load_and_keep_schema_v3(tmp_path):
+    path = str(tmp_path / "plans.json")
+    p = Planner(path)
+    p.plans[_procs_cell()] = _tuned_plan()
+    p.save()
+    with open(path) as f:
+        doc = json.load(f)
+    assert doc["version"] == 3, "procs cells are additive within schema v3"
+    loaded = Planner().load(path, strict=True)
+    assert set(loaded.plans) == {_procs_cell()}
+
+
+def test_single_process_serve_does_not_warm_foreign_topology_cells(tmp_path):
+    """A single-process server loading a cache written on a 2x2-process
+    topology must not enumerate those cells for AOT warmup — their plans
+    were timed over cross-process collectives it cannot reproduce — while
+    its own local cells still warm."""
+    path = str(tmp_path / "plans.json")
+    p = Planner(path)
+    p.plans[_procs_cell()] = _tuned_plan()
+    local_key = plan_key(1024, jnp.int32)          # this process's own cell
+    p.plans[local_key] = SortPlan("shared")
+    p.save()
+
+    server = Planner(path)
+    assert server.warmup_cells() == [(1024, "int32")]
+    # the foreign cell is still present and addressable, just not warmed
+    assert _procs_cell() in server.plans
+
+
+def test_explicit_fingerprint_lookup_reads_rank0_cells(tmp_path):
+    """Tooling (or a coordinator inspecting a multi-host file) reaches the
+    procs cells via ``plan_key(..., fingerprint=)`` without being part of
+    the topology — and the parse round-trips the fingerprint."""
+    path = str(tmp_path / "plans.json")
+    p = Planner(path)
+    p.plans[_procs_cell()] = _tuned_plan()
+    p.learned[_procs_cell()] = LearnedCapacity(3.0, 3.0, 5)
+    p.save()
+
+    reader = Planner(path)
+    key = plan_key(4096, jnp.int32, fingerprint=PROCS_FP)
+    assert reader.plans[key].us_per_call == 123.45
+    assert reader.capacity_factor_for(key) == 3.0
+    bucket, dtype_name, fp = parse_plan_key(key)
+    assert (bucket, dtype_name, fp) == (4096, "int32", PROCS_FP)
+
+
+def test_current_process_fingerprint_is_single_process():
+    """This pytest process is single-process jax: its fingerprint must carry
+    no procs suffix, which is exactly why foreign procs cells never match."""
+    assert "/procs" not in mesh_fingerprint()
+    assert "/procs" not in mesh_fingerprint(None)

@@ -210,6 +210,54 @@ def test_capacity_loop_pays_overflow_once_and_persists(tmp_path):
     assert Planner(plans).capacity_factor_for(cells[0], default=1.0) > 1.0
 
 
+def test_capacity_bucketing_pins_lowerings_under_decay():
+    """A calm era geometrically decays the learned factor toward the config
+    default; since the driver keys compiled step functions on the static
+    capacity, an *unbucketed* capacity would drift by a few tokens step
+    after step and pay a fresh lowering almost every time.  The pow2 bucket
+    must compress a whole decay trace into a handful of lowerings — this
+    deterministic trace pins the count."""
+    from types import SimpleNamespace
+
+    from repro.exchange import expert_capacity
+    from repro.train.adaptive import MoECapacityController
+
+    # the factor trace a CapacityLearner produces after skew ends: geometric
+    # decay from the skew-era high-water mark back to the default
+    factors = [max(1.0, 4.0 * (0.93 ** i)) for i in range(40)]
+
+    class DecayPlanner:
+        def __init__(self):
+            self.i = 0
+
+        def capacity_factor_for(self, key, default=1.0):
+            return factors[min(self.i, len(factors) - 1)]
+
+    cfg = MoEConfig(d_model=8, d_ff=4, n_experts=8, top_k=2, capacity_factor=1.0)
+    ctl = MoECapacityController(
+        cfg, tokens=128, ctx=SimpleNamespace(mesh=None, axes=()),
+        planner=DecayPlanner(),
+    )
+
+    caps, lowered = [], set()
+    for i in range(len(factors)):
+        ctl.planner.i = i
+        cap = ctl.capacity
+        caps.append(cap)
+        lowered.add(cap)  # the lru-keyed step table compiles once per value
+
+    raw = [
+        expert_capacity(ctl.t_loc, cfg.top_k, cfg.n_experts, f) for f in factors
+    ]
+    assert len(set(raw)) > 10, "the decay must actually move the raw capacity"
+    assert len(lowered) <= 4, f"bucketed decay must stay cheap: {sorted(lowered)}"
+    # the bucket only ever rounds *up* (and m is the loss-free ceiling), so
+    # bucketing never makes a step lossier than the raw capacity would be
+    assert all(c >= r or c >= ctl.m for c, r in zip(caps, raw))
+    assert all(c <= ctl.m for c in caps)
+    assert caps == sorted(caps, reverse=True), "decay trace must be monotone"
+
+
 def test_train_learned_factor_warm_starts_serving(tmp_path):
     """Cross-half acceptance: train a tiny skewed MoE LM (mesh=None cell),
     then start serve.py --moe against the same plan file and the same
